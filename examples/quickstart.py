@@ -1,0 +1,40 @@
+"""Quickstart: WAGMA-SGD on 8 (forced host) devices in ~a minute on CPU.
+
+Trains the reduced tinyllama config with wait-avoiding group model averaging
+(P_dp=4, S=2, tau=5) and compares the loss curve against Allreduce-SGD.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import Trainer
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+
+    print("== WAGMA-SGD (S=2, tau=5) ==")
+    wagma = Trainer(cfg, mesh, averager="wagma", group_size=2, tau=5,
+                    learning_rate=0.3, seq_len=64, global_batch=16)
+    h1 = wagma.run(steps=30, log_every=10)
+
+    print("== Allreduce-SGD baseline ==")
+    sync = Trainer(cfg, mesh, averager="allreduce", learning_rate=0.3,
+                   seq_len=64, global_batch=16)
+    h2 = sync.run(steps=30, log_every=10)
+
+    print(f"\nWAGMA     first->last loss: {h1[0]:.3f} -> {h1[-1]:.3f}")
+    print(f"Allreduce first->last loss: {h2[0]:.3f} -> {h2[-1]:.3f}")
+    assert h1[-1] < h1[0] and h2[-1] < h2[0]
+    print("both optimisers converge; WAGMA averages only within groups "
+          "per step (global consensus every tau) — see DESIGN.md")
+
+
+if __name__ == "__main__":
+    main()

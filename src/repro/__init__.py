@@ -1,0 +1,7 @@
+"""repro — WAGMA-SGD (Wait-Avoiding Group Model Averaging) on TPU pods in JAX.
+
+Reproduction of Li et al., "Breaking (Global) Barriers in Parallel Stochastic
+Optimization with Wait-Avoiding Group Averaging", IEEE TPDS 2020.
+"""
+
+__version__ = "0.1.0"

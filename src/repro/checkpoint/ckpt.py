@@ -1,0 +1,85 @@
+"""Checkpointing: pytrees -> .npz with flattened key paths + a JSON manifest.
+
+WAGMA keeps *divergent* per-replica weights (leading dp axis). ``consolidate``
+averages the replica axis to emit a single serving/export model — the paper's
+"global consensus achieved post-training by choosing the model average" (Q4).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def visit(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz has no bf16: widen to f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **flat)
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    manifest = {
+        "step": int(step),
+        "keys": sorted(flat),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restore into the structure of the given templates."""
+    data = np.load(os.path.join(path, "params.npz"))
+
+    def rebuild(template, npz):
+        flat_keys = []
+
+        def visit(p, leaf):
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in p)
+            flat_keys.append((key, leaf))
+
+        jax.tree_util.tree_map_with_path(visit, template)
+        leaves = []
+        for key, leaf in flat_keys:
+            arr = npz[key]
+            assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree.unflatten(jax.tree.structure(template), leaves)
+
+    params = rebuild(params_template, data)
+    with open(os.path.join(path, "manifest.json")) as f:
+        step = json.load(f)["step"]
+    if opt_template is not None:
+        opt = rebuild(opt_template, np.load(os.path.join(path, "opt_state.npz")))
+        return params, opt, step
+    return params, step
+
+
+def consolidate(stacked_params):
+    """Average the leading dp-replica axis -> single consensus model."""
+    return jax.tree.map(
+        lambda a: jnp.mean(a.astype(jnp.float32), axis=0).astype(a.dtype),
+        stacked_params)

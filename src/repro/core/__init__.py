@@ -1,0 +1,21 @@
+"""The paper's primary contribution: wait-avoiding group model averaging.
+
+* grouping.py        — Algorithm 1 (dynamic butterfly grouping), pure/static
+* group_allreduce.py — butterfly group allreduce via shard_map+ppermute,
+                       stacked simulator, collective cost model
+* wagma.py           — Algorithm 2 (WAGMA-SGD) as a composable averager
+* baselines.py       — the paper's comparison set (Table I)
+* staleness.py       — wait-avoidance/straggler semantics simulator
+"""
+
+from repro.core.grouping import (default_group_size, groups_for_iteration,
+                                 mask_bits, n_phases, phase_offset,
+                                 propagation_latency)
+from repro.core.wagma import WagmaAverager, WagmaConfig
+from repro.core.baselines import make_averager
+
+__all__ = [
+    "WagmaAverager", "WagmaConfig", "make_averager",
+    "default_group_size", "groups_for_iteration", "mask_bits",
+    "n_phases", "phase_offset", "propagation_latency",
+]

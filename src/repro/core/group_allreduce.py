@@ -1,0 +1,153 @@
+"""Wait-avoiding group allreduce — TPU-native realisation.
+
+The paper implements group allreduce as activation messages + a butterfly
+(recursive-doubling) exchange inside each group, on MPI.  Under XLA the same
+exchange is ``log2(S)`` stages of ``jax.lax.ppermute`` with XOR-partner
+permutations, executed inside a ``jax.shard_map`` that is *manual* over the
+data-parallel mesh axes and *auto* (GSPMD) over the model axis.  Each stage
+combines the local shard with the partner's:
+
+    for bit in mask_bits(P, S, t):  w = (w + ppermute(w, bit)) ;  w /= S
+
+The XOR bit decides which mesh axis carries the exchange: low bits permute
+within the ``data`` axis (intra-pod ICI), high bits within the ``pod`` axis
+(inter-pod links) — the topology-awareness the paper gets from its butterfly.
+
+Because XLA permutations are static, functions here take a *static* phase
+offset; the training loop cycles through ``grouping.distinct_offsets`` and
+dispatches the matching compiled step (see train/train_step.py).
+
+Two more entry points ship alongside:
+
+* ``global_average``        — the tau-periodic synchronous allreduce (psum).
+* ``group_average_stacked`` — single-process simulator on stacked (P, ...)
+  pytrees via the doubly-stochastic averaging matrix; shares the group math
+  with the distributed path and is used by tests and convergence benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grouping
+
+
+# ---------------------------------------------------------------------------
+# Distributed path (call inside shard_map; manual over dp axes)
+# ---------------------------------------------------------------------------
+
+def dp_axis_layout(mesh_axis_names: Sequence[str], mesh_shape: dict,
+                   dp_axes: Sequence[str]) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
+    """Minor-to-major dp axis names/sizes for global dp-rank bit mapping.
+
+    JAX mesh axes are major-to-minor left-to-right, so e.g. mesh
+    ('pod', 'data', 'model') with dp_axes ('pod', 'data') gives layout
+    names=('data', 'pod'), sizes=(16, 2): global dp rank = pod*16 + data.
+    """
+    ordered = [a for a in mesh_axis_names if a in dp_axes]
+    names = tuple(reversed(ordered))
+    sizes = tuple(mesh_shape[a] for a in names)
+    return names, sizes
+
+
+def _xor_perm(n: int, mask: int):
+    return [(i, i ^ mask) for i in range(n)]
+
+
+def butterfly_exchange(x: jax.Array, bit: int, axis_names: Sequence[str],
+                       axis_sizes: Sequence[int]) -> jax.Array:
+    """One butterfly stage: return the XOR-partner's value for global dp bit."""
+    ax, local_bit = grouping.split_bit_over_axes(bit, axis_sizes)
+    perm = _xor_perm(axis_sizes[ax], 1 << local_bit)
+    return jax.lax.ppermute(x, axis_names[ax], perm)
+
+
+def group_average(tree, *, offset: int, P: int, S: int,
+                  axis_names: Sequence[str], axis_sizes: Sequence[int],
+                  average_dtype=None):
+    """Group model averaging over groups of size S (paper Alg. 2 line 9+11).
+
+    Must be called inside shard_map manual over ``axis_names``. Applies
+    log2(S) ppermute+add stages and divides by S; every worker ends with the
+    mean of the S models in its (dynamically selected) group.
+    """
+    bits = grouping.mask_bits_for_offset(P, S, offset)
+    inv_s = 1.0 / S
+
+    def avg_leaf(w):
+        orig_dtype = w.dtype
+        acc = w.astype(average_dtype) if average_dtype is not None else w
+        for bit in bits:
+            acc = acc + butterfly_exchange(acc, bit, axis_names, axis_sizes)
+        acc = acc * jnp.asarray(inv_s, acc.dtype)
+        return acc.astype(orig_dtype)
+
+    return jax.tree.map(avg_leaf, tree)
+
+
+def global_average(tree, axis_names: Sequence[str]):
+    """tau-periodic synchronous allreduce mean over all dp replicas (line 16)."""
+    names = tuple(axis_names)
+
+    def avg_leaf(w):
+        return jax.lax.pmean(w.astype(jnp.float32), names).astype(w.dtype)
+
+    return jax.tree.map(avg_leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# Stacked simulator path (single process, leading replica axis)
+# ---------------------------------------------------------------------------
+
+def averaging_matrix(P: int, S: int, t: int) -> np.ndarray:
+    A = np.asarray(grouping.averaging_matrix(P, S, t), dtype=np.float32)
+    return A
+
+
+def group_average_stacked(stacked_tree, *, P: int, S: int, t: int):
+    """Simulator: W[i] <- mean over i's group, on (P, ...) stacked pytrees."""
+    A = jnp.asarray(averaging_matrix(P, S, t))
+
+    def avg_leaf(w):
+        flat = w.reshape(P, -1).astype(jnp.float32)
+        out = A @ flat
+        return out.reshape(w.shape).astype(w.dtype)
+
+    return jax.tree.map(avg_leaf, stacked_tree)
+
+
+def global_average_stacked(stacked_tree, *, P: int):
+    def avg_leaf(w):
+        mean = jnp.mean(w.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, w.shape).astype(w.dtype)
+
+    return jax.tree.map(avg_leaf, stacked_tree)
+
+
+# ---------------------------------------------------------------------------
+# Analytical collective-cost model (used by benchmarks & roofline sanity)
+# ---------------------------------------------------------------------------
+
+def collective_bytes_per_device(n_bytes: int, P: int, S: int,
+                                algorithm: str = "wagma") -> float:
+    """Bytes sent per device per training step for an n_bytes payload.
+
+    butterfly global  : log2(P) * N        (recursive doubling, full payload)
+    ring allreduce    : 2N(P-1)/P ~= 2N    (bandwidth-optimal global)
+    wagma group       : log2(S) * N        (the paper's saving)
+    gossip (D-PSGD)   : 2N                 (two neighbours)
+    """
+    lp, ls = grouping.ilog2(P), grouping.ilog2(max(S, 1))
+    if algorithm == "wagma":
+        return ls * n_bytes
+    if algorithm == "butterfly_global":
+        return lp * n_bytes
+    if algorithm == "ring_allreduce":
+        return 2.0 * n_bytes * (P - 1) / P
+    if algorithm == "gossip":
+        return 2.0 * n_bytes
+    raise ValueError(algorithm)

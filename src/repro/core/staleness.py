@@ -1,0 +1,142 @@
+"""Functional simulator of WAGMA-SGD's wait-avoidance semantics (Alg. 2 lines 8-17).
+
+TPU pods execute SPMD in lock-step, so the *activation/staleness* half of the
+paper cannot occur on the production path (see DESIGN.md §2).  This module
+simulates it faithfully on stacked (P, ...) pytrees so that the convergence
+benchmarks can reproduce the paper's accuracy claims under straggler
+injection (paper §V-B simulated 320 ms delays):
+
+* every worker keeps a *send buffer* holding the last local model it completed
+  (paper Fig. 3);
+* when the group allreduce of iteration t triggers, on-time workers contribute
+  the fresh ``W'_t`` while stragglers passively contribute their (stale)
+  buffer;
+* a straggler that finishes during iteration t merges late:
+  ``W_{t+1} = (W_sum + W'_t) / (S+1)``  (Alg. 2 line 13);
+* a worker so slow it does not finish at all keeps computing — its buffer ages
+  by one iteration (bounded-staleness growth, theory Assumption 3);
+* every tau iterations a global synchronous allreduce forces consistency
+  (Alg. 2 line 16), resetting all staleness to zero.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import group_allreduce, grouping
+
+
+class SimState(NamedTuple):
+    """Stacked per-worker state. All pytree leaves have leading axis P."""
+    models: object        # W_t^i        — current working model
+    buffers: object       # send buffer  — last *completed* local model W'
+    age: jnp.ndarray      # (P,) int32   — staleness of each buffer, iterations
+    step: jnp.ndarray     # ()  int32    — global iteration t
+
+
+def init_state(stacked_params) -> SimState:
+    P = jax.tree.leaves(stacked_params)[0].shape[0]
+    return SimState(
+        models=stacked_params,
+        buffers=jax.tree.map(jnp.copy, stacked_params),
+        age=jnp.zeros((P,), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _where_workers(mask, a, b):
+    """Select per-worker between two stacked pytrees with a (P,) bool mask."""
+    def sel(x, y):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+    return jax.tree.map(sel, a, b)
+
+
+def wagma_sim_step(state: SimState, local_update: Callable, *, P: int, S: int,
+                   tau: int, ready: jnp.ndarray, completes: jnp.ndarray,
+                   t: int) -> SimState:
+    """One simulated WAGMA-SGD iteration.
+
+    Args:
+      local_update: stacked-models -> stacked proposed W' (applies the local
+        SGD/optimiser step per worker on its own shard of data).
+      ready:     (P,) bool — finished *before* the group collective triggered;
+                 contributes fresh W' (Alg. 2 line 10-11).
+      completes: (P,) bool — finishes its local step within iteration t at all.
+                 ready implies completes. Late-but-completing workers merge via
+                 line 13; non-completing workers keep computing (buffer ages).
+      t: python int iteration (selects the dynamic group pattern).
+    """
+    ready = jnp.logical_and(ready, completes)
+    Wprime = local_update(state.models)
+
+    sync_now = (t + 1) % tau == 0
+    if sync_now:
+        # Global barrier: everyone is forced to finish and contribute (line 16).
+        avg = group_allreduce.global_average_stacked(Wprime, P=P)
+        return SimState(models=avg,
+                        buffers=jax.tree.map(jnp.copy, Wprime),
+                        age=jnp.zeros_like(state.age),
+                        step=state.step + 1)
+
+    # Contribution: fresh if ready, else the stale send buffer.
+    contrib = _where_workers(ready, Wprime, state.buffers)
+
+    # Group sums via the iteration-t averaging matrix (A @ contrib == Wsum/S).
+    group_mean = group_allreduce.group_average_stacked(contrib, P=P, S=S, t=t)
+
+    # line 11: ready worker adopts the group mean (== Wsum / S).
+    # line 13: late-but-completing worker merges its late W':
+    #          (Wsum + W') / (S+1) == (S * group_mean + W') / (S+1)
+    def late_merge(gm, wp):
+        return (S * gm.astype(jnp.float32) + wp.astype(jnp.float32)) / (S + 1.0)
+
+    merged = jax.tree.map(lambda gm, wp: late_merge(gm, wp).astype(gm.dtype),
+                          group_mean, Wprime)
+    next_completing = _where_workers(ready, group_mean, merged)
+    # Non-completing workers are still mid-computation: model unchanged.
+    models = _where_workers(completes, next_completing, state.models)
+
+    # Send buffer: updated with W' whenever the local step completed.
+    buffers = _where_workers(completes, Wprime, state.buffers)
+    age = jnp.where(ready, 0, jnp.where(completes, 1, state.age + 1))
+
+    return SimState(models=models, buffers=buffers, age=age.astype(jnp.int32),
+                    step=state.step + 1)
+
+
+@dataclass
+class StragglerModel:
+    """Samples per-iteration readiness, mimicking paper §V-B's injected delay.
+
+    Each iteration, ``n_stragglers`` distinct workers are drawn; a straggler is
+    late to the collective, and with probability ``p_stall`` it does not even
+    complete its local step within the iteration (multi-step staleness).
+    """
+    P: int
+    n_stragglers: int = 2
+    p_stall: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self):
+        ready = np.ones((self.P,), bool)
+        completes = np.ones((self.P,), bool)
+        if self.n_stragglers > 0:
+            idx = self._rng.choice(self.P, size=self.n_stragglers, replace=False)
+            ready[idx] = False
+            stall = self._rng.random(self.n_stragglers) < self.p_stall
+            completes[idx[stall]] = False
+        return jnp.asarray(ready), jnp.asarray(completes)
+
+
+def max_staleness_bound(tau: int) -> int:
+    """Theory Assumption 3: staleness is bounded by the sync period."""
+    return tau

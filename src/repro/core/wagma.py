@@ -1,0 +1,93 @@
+"""WAGMA-SGD (paper Algorithm 2) — distributed averager + configuration.
+
+The training step (train/train_step.py) is, per data-parallel replica:
+
+    G     = grad(loss)(W, local_batch)          # local gradients, NO dp psum
+    W'    = W + U(G)                            # local optimiser step
+    if (t+1) % tau != 0:
+        W <- group_average(W', groups(t))       # wait-avoiding group allreduce
+    else:
+        W <- global_average(W')                 # synchronous allreduce (line 16)
+
+The dynamic group pattern of iteration t is static per compiled step variant
+(XLA collectives need static permutations); ``WagmaAverager`` exposes
+``n_phases`` variants and the host loop picks ``phase_for_step(t)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import group_allreduce, grouping
+
+
+@dataclass(frozen=True)
+class WagmaConfig:
+    group_size: Optional[int] = None      # None -> sqrt(P) rounded to pow2 (paper)
+    tau: int = 10                         # global sync period (paper §V-B)
+    average_dtype: Optional[str] = "float32"   # accumulation dtype for averaging
+    dynamic_groups: bool = True           # False -> fixed groups (paper ablation 2)
+
+
+class WagmaAverager:
+    """The paper's contribution as a composable averaging strategy."""
+
+    name = "wagma"
+    grad_comm = False   # averages *models*, not gradients
+
+    def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int],
+                 cfg: WagmaConfig = WagmaConfig()):
+        # minor-to-major layout (see group_allreduce.dp_axis_layout)
+        self.axis_names = tuple(dp_axis_names)
+        self.axis_sizes = tuple(dp_axis_sizes)
+        self.P = 1
+        for s in self.axis_sizes:
+            self.P *= s
+        self.S = cfg.group_size or grouping.default_group_size(self.P)
+        if self.S > self.P:
+            raise ValueError(f"group size {self.S} exceeds dp world {self.P}")
+        self.cfg = cfg
+        if cfg.dynamic_groups:
+            self.offsets: Tuple[int, ...] = grouping.distinct_offsets(self.P, self.S)
+        else:
+            self.offsets = (0,)   # ablation 2: fixed groups
+
+    # -- compiled-variant bookkeeping -------------------------------------
+    @property
+    def n_phases(self) -> int:
+        return len(self.offsets)
+
+    def phase_for_step(self, t: int) -> int:
+        if not self.cfg.dynamic_groups:
+            return 0
+        return self.offsets.index(grouping.phase_offset(self.P, self.S, t))
+
+    def sync_due(self, t: int) -> bool:
+        return (t + 1) % self.cfg.tau == 0
+
+    # -- collective bodies (call inside shard_map, manual over dp axes) ---
+    def comm(self, tree, phase: int):
+        """Wait-avoiding group model averaging (Alg. 2 line 9 + 11)."""
+        dtype = jnp.dtype(self.cfg.average_dtype) if self.cfg.average_dtype else None
+        return group_allreduce.group_average(
+            tree, offset=self.offsets[phase], P=self.P, S=self.S,
+            axis_names=self.axis_names, axis_sizes=self.axis_sizes,
+            average_dtype=dtype)
+
+    def sync(self, tree):
+        """Synchronous global allreduce (Alg. 2 line 16)."""
+        return group_allreduce.global_average(tree, self.axis_names)
+
+    # -- analysis ----------------------------------------------------------
+    def comm_bytes_per_step(self, payload_bytes: int) -> float:
+        """Average per-device collective bytes/step incl. the tau-sync."""
+        tau = self.cfg.tau
+        group = group_allreduce.collective_bytes_per_device(
+            payload_bytes, self.P, self.S, "wagma")
+        # tau-sync modelled as bandwidth-optimal global ring allreduce
+        sync = group_allreduce.collective_bytes_per_device(
+            payload_bytes, self.P, self.S, "ring_allreduce")
+        return ((tau - 1) * group + sync) / tau

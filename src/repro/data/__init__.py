@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticTask, make_batch_fn
+
+__all__ = ["SyntheticTask", "make_batch_fn"]

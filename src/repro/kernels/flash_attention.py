@@ -1,0 +1,123 @@
+"""Flash attention for TPU in Pallas: blockwise online-softmax with explicit
+VMEM BlockSpec tiling (MXU-aligned 128-multiples), causal + sliding-window +
+GQA (grouped KV heads via index_map, no materialised head repeat).
+
+Grid: (batch*heads, num_q_blocks, num_k_blocks) — the K dimension is the
+innermost (sequential on TPU) axis so the fp32 accumulators (acc, m, l) live
+in VMEM scratch across K steps.
+
+The hardware TARGET is TPU (Mosaic); on CPU the kernel is validated with
+``interpret=True`` against ref.flash_attention_ref (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window, block_q: int,
+                 block_k: int, nk: int, sq: int, sk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (block_q, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < sk
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,Sq,H,hd), k/v (B,Sk,KH,hd) -> (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    assert h % kh == 0
+    rep = h // kh
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_k
+
+    # layout (B*H, S, hd): flatten batch x heads into the parallel grid axis
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, q.shape[1], hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, v.shape[1], hd)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk, sq=sq, sk=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            # GQA: head bh reads KV head bh//rep — no repeat materialised
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, qi, kj, rep=rep: (bh // rep, kj, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, qi, kj, rep=rep: (bh // rep, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, q.shape[1], hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc
+            pltpu.VMEM((block_q,), jnp.float32),       # m
+            pltpu.VMEM((block_q,), jnp.float32),       # l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(b, h, q.shape[1], hd).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,52 @@
+"""Fused butterfly-combine kernel: out = (w + recv) * inv_s.
+
+The arithmetic half of a WAGMA butterfly stage (paper Alg. 2 line 11): after
+``ppermute`` delivers the partner's weights, each device combines its shard
+with the received shard. Done naively this is two HBM-bound elementwise passes
+(add, then scale) plus dtype converts; the fused kernel streams both operands
+through VMEM tiles once, accumulating in fp32 and writing the model dtype —
+one read of each operand + one write, the HBM floor.
+
+1-D tiling: weights arrive flattened; the grid walks (n // block) tiles of
+``block`` elements (8*128*128 default = 128 KiB bf16 tiles, well inside the
+~16 MiB VMEM budget with double-buffering).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(w_ref, r_ref, o_ref, *, inv_s: float):
+    w = w_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    o_ref[...] = ((w + r) * inv_s).astype(o_ref.dtype)
+
+
+def group_average_combine(w, recv, inv_s: float, *, block: int = 8 * 128 * 128,
+                          interpret: bool = False):
+    """Flat fused (w + recv) * inv_s; w/recv any shape, same dtype."""
+    shape, dtype = w.shape, w.dtype
+    flat_w = w.reshape(-1)
+    flat_r = recv.reshape(-1)
+    n = flat_w.size
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        flat_w = jnp.pad(flat_w, (0, pad))
+        flat_r = jnp.pad(flat_r, (0, pad))
+    grid = (flat_w.size // block,)
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, inv_s=inv_s),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((flat_w.size,), dtype),
+        interpret=interpret,
+    )(flat_w, flat_r)
+    return out[:n].reshape(shape)

@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests; on a TPU backend the Mosaic kernels lower natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.group_average import group_average_combine as _combine
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("inv_s", "interpret"))
+def group_average_combine(w, recv, inv_s, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _combine(w, recv, float(inv_s), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, x, h0=None, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rglru(a, x, h0, interpret=interpret)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *naive* references (materialise the full score matrix, sequential
+scans) — slow but obviously correct, for the kernel test sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,KH,hd) -> (B,Sq,H,hd). GQA by head repeat."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def group_average_ref(w, recv, inv_s: float):
+    """Butterfly combine step: (w + recv) * inv_s in fp32, back to w.dtype."""
+    return ((w.astype(jnp.float32) + recv.astype(jnp.float32)) * inv_s
+            ).astype(w.dtype)
+
+
+def rglru_scan_ref(a, x, h0=None):
+    """Sequential linear recurrence h_t = a_t*h_{t-1} + x_t; a,x (B,S,W)."""
+    b, s, w = a.shape
+    h = jnp.zeros((b, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inputs):
+        at, xt = inputs
+        h = at.astype(jnp.float32) * h + xt.astype(jnp.float32)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+
+def mlstm_chunk_ref(q, k, v, i_pre, f_pre):
+    """Sequential mLSTM (matches models/xlstm.py mlstm_step).
+
+    q,k,v (B,S,H,dh); i_pre,f_pre (B,S,H). Returns h (B,S,H,dh) fp32.
+    """
+    from repro.models.xlstm import mlstm_step
+    b, s, h, dh = q.shape
+    state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+             jnp.zeros((b, h, dh), jnp.float32),
+             jnp.full((b, h), -1e30, jnp.float32))
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (q, k, v, i_pre, f_pre))
+    _, hs = jax.lax.scan(mlstm_step, state, xs)
+    return jnp.moveaxis(hs, 0, 1)

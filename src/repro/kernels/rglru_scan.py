@@ -1,0 +1,84 @@
+"""RG-LRU linear recurrence kernel: h_t = a_t * h_{t-1} + x_t.
+
+TPU adaptation (DESIGN.md): the recurrence is elementwise over the channel
+dim, so we tile channels onto the 128-lane VPU axis and batch onto sublanes;
+time is walked *sequentially inside the block* while the grid parallelises
+(batch-tile, channel-tile). Per grid step the kernel streams a
+(block_b, block_t, block_w) brick of a/x through VMEM with the carry h held
+in a VMEM scratch across the time-block axis of the grid.
+
+Grid: (nb, nw, nt) with time innermost (sequential) — carry persists in
+scratch between time blocks of the same (batch, channel) tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, h0_ref, o_ref, carry_ref, *, block_t: int,
+                  nt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        carry_ref[...] = h0_ref[:, 0, :].astype(jnp.float32)
+
+    h = carry_ref[...]
+    a = a_ref[...].astype(jnp.float32)                 # (bb, block_t, bw)
+    x = x_ref[...].astype(jnp.float32)
+
+    def step(t, hs):
+        h, out = hs
+        h = a[:, t, :] * h + x[:, t, :]
+        out = jax.lax.dynamic_update_index_in_dim(out, h, t, 1)
+        return h, out
+
+    out0 = jnp.zeros_like(x)
+    h, out = jax.lax.fori_loop(0, block_t, step, (h, out0))
+    o_ref[...] = out.astype(o_ref.dtype)
+    carry_ref[...] = h
+
+
+def rglru_scan(a, x, h0=None, *, block_b: int = 8, block_t: int = 128,
+               block_w: int = 128, interpret: bool = False):
+    """a, x (B,S,W); h0 (B,W) or None -> h (B,S,W) (dtype of x)."""
+    b, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+    block_b = min(block_b, b)
+    block_t = min(block_t, s)
+    block_w = min(block_w, w)
+    pb, pt, pw = (-b) % block_b, (-s) % block_t, (-w) % block_w
+    if pb or pt or pw:
+        a = jnp.pad(a, ((0, pb), (0, pt), (0, pw)))
+        # pad x with zeros and a with zeros: h stays constant in padding
+        x = jnp.pad(x, ((0, pb), (0, pt), (0, pw)))
+        h0 = jnp.pad(h0, ((0, pb), (0, pw)))
+    nb = a.shape[0] // block_b
+    nw = a.shape[2] // block_w
+    nt = a.shape[1] // block_t
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, block_t=block_t, nt=nt),
+        grid=(nb, nw, nt),
+        in_specs=[
+            pl.BlockSpec((block_b, block_t, block_w),
+                         lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((block_b, block_t, block_w),
+                         lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((block_b, 1, block_w),
+                         lambda bi, wi, ti: (bi, 0, wi)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t, block_w),
+                               lambda bi, wi, ti: (bi, ti, wi)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, x, h0.reshape(h0.shape[0], 1, h0.shape[1]))
+    return out[:b, :s, :w]

@@ -1,0 +1,2 @@
+# Launchers: production mesh, dry-run (lower+compile on 512 virtual devices),
+# roofline analysis, and the real training / serving drivers.

@@ -1,0 +1,249 @@
+"""Analytic FLOP / HBM-byte model per (arch x input-shape x mesh).
+
+``cost_analysis()`` counts scan bodies once (DESIGN.md §6b), so the roofline
+compute/memory terms come from this model; tests validate the per-layer FLOP
+formulas against ``cost_analysis`` on small *unrolled* model variants, and the
+collective term comes from the loop-aware HLO parser (hlo_analysis.py).
+
+Conventions:
+* FLOPs are per *device* per step: per-replica flops / n_model.
+* A matmul (m,k)@(k,n) costs 2mkn.
+* Training = fwd + bwd (2x fwd) + remat re-forward ~= 4x fwd.
+* MoE expert compute is counted at *capacity* (cf-inflated — what the HLO
+  actually does), with the useful-FLOP ratio exposing the padding waste.
+* HBM bytes are a structured estimate: parameter traffic (fwd read + bwd read
+  + grad write + optimiser update + averaging r/w) + activation traffic
+  (major per-layer tensors, x2 for bwd) + KV-cache traffic for decode.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, InputShape
+
+
+@dataclass
+class CostReport:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    model_flops: float            # 6*N_active*D (the "useful" reference)
+    params_total: int
+    params_active: int
+    breakdown: dict
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active-per-token) parameter counts from the config."""
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    H, KH, V, L = cfg.n_heads, cfg.n_kv_heads, cfg.vocab, cfg.n_layers
+    attn = d * H * hd + 2 * d * KH * hd + H * hd * d
+    mlp = d * ff * (3 if cfg.gated_mlp else 2)
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+
+    if cfg.family == "moe":
+        n_moe = (L - cfg.first_dense) // cfg.moe_every
+        n_dense = L - n_moe
+        expert = 3 * d * ff
+        shared = 3 * d * ff if cfg.shared_expert else 0
+        router = d * cfg.n_experts
+        total = (L * attn + n_dense * mlp
+                 + n_moe * (cfg.n_experts * expert + shared + router) + emb)
+        active = (L * attn + n_dense * mlp
+                  + n_moe * (cfg.top_k * expert + shared + router) + emb)
+        return total, active
+
+    if cfg.family == "ssm":            # xlstm: alternating mLSTM/sLSTM
+        di = 2 * d
+        mlstm = d * 2 * di + 3 * di * di + 2 * di * cfg.n_heads + di * d
+        dh = d // cfg.n_heads
+        slstm = d * 4 * d + cfg.n_heads * dh * 4 * dh + d * d
+        total = (L // 2) * (mlstm + slstm) + emb
+        return total, total
+
+    if cfg.family == "hybrid":         # recurrentgemma
+        w = cfg.lru_width or d
+        rec = 2 * d * w + 2 * w * w + cfg.conv_width * w + w * d + mlp
+        n_attn = L // 3
+        n_rec = L - n_attn
+        total = n_rec * rec + n_attn * (attn + mlp) + emb
+        return total, total
+
+    if cfg.family == "audio":          # enc-dec
+        cross = d * H * hd + 2 * d * KH * hd + H * hd * d
+        enc = cfg.encoder_layers * (attn + mlp)
+        dec = L * (attn + cross + mlp)
+        src_emb = V * d if cfg.encoder_frames == 0 else 0
+        pos = (cfg.encoder_frames or 4096) * d
+        total = enc + dec + emb + src_emb + pos
+        return total, total
+
+    total = L * (attn + mlp) + emb     # dense / vlm
+    return total, total
+
+
+def _attn_ctx(cfg, S, causal_avg=True):
+    """Average attended context length per token during a forward."""
+    full = S / 2 if causal_avg else S
+    if cfg.local_per_global > 0:
+        k = cfg.local_per_global
+        w = min(cfg.sliding_window, S)
+        loc = min(w, S / 2)
+        return (k * loc + full) / (k + 1)
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, S / 2)
+    return full
+
+
+def fwd_flops_per_token(cfg: ModelConfig, S: int) -> dict:
+    """Forward FLOPs per token, split by component."""
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    H, KH, V, L = cfg.n_heads, cfg.n_kv_heads, cfg.vocab, cfg.n_layers
+    proj = 2 * (d * H * hd + 2 * d * KH * hd + H * hd * d)
+    ctx = _attn_ctx(cfg, S)
+    score = 2 * 2 * ctx * H * hd
+    mlp = 2 * d * ff * (3 if cfg.gated_mlp else 2)
+    unemb = 2 * d * V
+    out = {"unembed": unemb}
+
+    if cfg.family == "moe":
+        n_moe = (L - cfg.first_dense) // cfg.moe_every
+        n_dense = L - n_moe
+        cap_mult = cfg.capacity_factor
+        expert = 2 * 3 * d * ff * cfg.top_k * cap_mult
+        shared = 2 * 3 * d * ff if cfg.shared_expert else 0
+        router = 2 * d * cfg.n_experts
+        out.update(attn=L * (proj + score), dense_mlp=n_dense * mlp,
+                   moe=n_moe * (expert + shared + router))
+        return out
+
+    if cfg.family == "ssm":
+        di = 2 * d
+        dh = di // cfg.n_heads
+        m_proj = 2 * (d * 2 * di + 3 * di * di + di * d)
+        m_state = 8 * dh * dh * cfg.n_heads     # C update + Cq per token
+        dhs = d // cfg.n_heads
+        s_proj = 2 * (4 * d * d + cfg.n_heads * dhs * 4 * dhs + d * d)
+        s_state = 12 * d
+        out.update(mlstm=(L // 2) * (m_proj + m_state),
+                   slstm=(L // 2) * (s_proj + s_state))
+        return out
+
+    if cfg.family == "hybrid":
+        w = cfg.lru_width or d
+        rec = 2 * (2 * d * w + 2 * w * w + w * d) + 2 * cfg.conv_width * w + 10 * w
+        n_attn = L // 3
+        n_rec = L - n_attn
+        win_ctx = min(2048, S / 2)
+        attn_l = proj + 2 * 2 * win_ctx * H * hd
+        out.update(recurrent=n_rec * (rec + mlp), attn=n_attn * (attn_l + mlp))
+        return out
+
+    if cfg.family == "audio":
+        # decoder per-token; encoder amortised over decoder tokens
+        F = cfg.encoder_frames or 64
+        cross = proj / 2 + 2 * 2 * F * H * hd
+        enc_per_dec_tok = cfg.encoder_layers * (proj + 2 * 2 * (F / 2) * H * hd
+                                                + mlp) * (F / max(S, 1))
+        out.update(dec=L * (proj + score + cross + mlp), enc=enc_per_dec_tok)
+        return out
+
+    out.update(attn=L * (proj + score), mlp=L * mlp)
+    return out
+
+
+def train_cost(cfg: ModelConfig, shape: InputShape, *, n_dp: int,
+               n_model: int, remat: bool = True, averaging_stages: int = 2,
+               optimizer: str = "sgd") -> CostReport:
+    B, S = shape.global_batch, shape.seq_len
+    tokens_local = B * S / n_dp
+    comp = fwd_flops_per_token(cfg, S)
+    fwd = sum(comp.values()) * tokens_local
+    mult = 4.0 if remat else 3.0
+    flops_replica = fwd * mult
+    flops_device = flops_replica / n_model
+
+    total, active = param_count(cfg)
+    p_local = total / n_model                 # per-device params (bf16)
+    opt_bytes = 8 if optimizer == "sgd" else 16   # fp32 m (or m+v) r/w
+    # fwd read + bwd read + grad write + opt + param write + averaging r/w
+    param_traffic = p_local * (2 + 2 + 2 + opt_bytes + 2
+                               + 4 * averaging_stages)
+    d = cfg.d_model
+    L = max(cfg.n_layers, 1)
+    act_traffic = tokens_local / n_model * d * L * 2 * 8 * (2 if remat else 1.5)
+    hbm = param_traffic + act_traffic
+
+    model_flops = 6.0 * active * (B * S) / (n_dp * n_model)
+    return CostReport(flops_device, hbm, model_flops, total, active,
+                      {"fwd_components_per_token": comp,
+                       "param_traffic": param_traffic,
+                       "act_traffic": act_traffic})
+
+
+def prefill_cost(cfg, shape, *, n_dp: int, n_model: int) -> CostReport:
+    B, S = shape.global_batch, shape.seq_len
+    tokens_local = B * S / n_dp
+    comp = fwd_flops_per_token(cfg, S)
+    fwd = sum(comp.values()) * tokens_local
+    flops_device = fwd / n_model
+    total, active = param_count(cfg)
+    p_local = total / n_model
+    d = cfg.d_model
+    act = tokens_local / n_model * d * cfg.n_layers * 2 * 6
+    kv_write = tokens_local / n_model * cfg.n_layers * 2 * cfg.n_kv_heads * cfg.hd * 2
+    hbm = p_local * 2 + act + kv_write
+    model_flops = 2.0 * active * B * S / (n_dp * n_model)
+    return CostReport(flops_device, hbm, model_flops, total, active,
+                      {"fwd_components_per_token": comp, "kv_write": kv_write})
+
+
+def decode_cost(cfg, shape, *, n_dp: int, n_model: int) -> CostReport:
+    """One-token serve_step against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    tok_local = max(B / n_dp, 1) if B >= n_dp else B
+    comp = fwd_flops_per_token(cfg, S)
+    # decode attends the full cache, not S/2
+    comp = dict(comp)
+    for key in ("attn", "dec"):
+        if key in comp:
+            comp[key] = comp[key] * 2          # causal-avg -> full ctx
+    fwd = sum(comp.values()) * tok_local
+    flops_device = fwd / n_model
+
+    total, active = param_count(cfg)
+    # our capacity-dispatch MoE reads ALL expert weights each step (finding!)
+    weight_read = total / n_model * 2
+    # KV-cache read traffic (the decode bottleneck)
+    if cfg.family == "ssm":
+        di = 2 * cfg.d_model
+        dh = di // cfg.n_heads
+        state = (cfg.n_layers // 2) * (cfg.n_heads * dh * dh + 3 * cfg.d_model) * 4
+        cache_read = B * state * 2 / (n_dp * n_model)
+    elif cfg.family == "hybrid":
+        w_lru = cfg.lru_width or cfg.d_model
+        n_attn = cfg.n_layers // 3
+        cache_read = (B * (cfg.n_layers - n_attn) * w_lru * 4 * 2
+                      + B * n_attn * min(2048, S) * 2 * cfg.n_kv_heads
+                      * cfg.hd * 2) / (n_dp * n_model)
+    else:
+        ctx = min(cfg.sliding_window, S) if cfg.sliding_window \
+            and cfg.local_per_global == 0 else S
+        if cfg.local_per_global > 0:
+            k = cfg.local_per_global
+            ctx = (k * min(cfg.sliding_window, S) + S) / (k + 1)
+        layers = cfg.n_layers + (cfg.encoder_layers if cfg.family == "audio" else 0)
+        cache_read = (B * layers * ctx * 2 * cfg.n_kv_heads * cfg.hd * 2
+                      / (n_dp * n_model))
+    hbm = weight_read + cache_read
+    model_flops = 2.0 * active * B / (n_dp * n_model)
+    return CostReport(flops_device, hbm, model_flops, total, active,
+                      {"weight_read": weight_read, "cache_read": cache_read})
+
+
+def cost_for(cfg, shape, kind: str, *, n_dp: int, n_model: int, **kw):
+    if kind == "train":
+        return train_cost(cfg, shape, n_dp=n_dp, n_model=n_model, **kw)
+    if kind == "prefill":
+        return prefill_cost(cfg, shape, n_dp=n_dp, n_model=n_model)
+    return decode_cost(cfg, shape, n_dp=n_dp, n_model=n_model)

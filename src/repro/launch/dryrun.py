@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); smoke tests and benches never import this module, so
+they see the real single CPU device.
+
+For each pair this lowers the appropriate step:
+    train_4k              -> WAGMA train_step (group-averaging variant)
+    prefill_32k           -> prefill (forward + KV capture)
+    decode_32k, long_500k -> serve_step (1 token vs seq_len cache)
+
+and records memory_analysis / cost_analysis / loop-aware collective bytes to
+experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json.
+
+long_500k rules (DESIGN.md §5): native for xlstm/recurrentgemma/gemma3;
+explicit `swa` sliding-window variant for the pure full-attention archs;
+skipped for whisper (enc-dec 448-position decoder semantics).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, arch_names, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.launch.hlo_analysis import collective_summary
+from repro.launch.costmodel import cost_for, param_count
+from repro.models.registry import build_model
+
+LONG_NATIVE = {"xlstm-350m", "recurrentgemma-2b", "gemma3-12b"}
+LONG_SKIP = {"whisper-medium"}
+SWA_WINDOW = 8192
+
+
+def resolve_config(arch: str, shape_name: str):
+    """Returns (cfg, variant_tag) or (None, reason) for documented skips."""
+    cfg = get_config(arch)
+    if shape_name != "long_500k":
+        return cfg, ""
+    if arch in LONG_SKIP:
+        return None, "skip: enc-dec decoder has no 500k-context analogue"
+    if arch in LONG_NATIVE:
+        return cfg, ""
+    return cfg.with_sliding_window(SWA_WINDOW), "swa"
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
+               group_size=None, fsdp: int = 1, donate: bool = True,
+               average_dtype: str = "float32", microbatch=None,
+               cfg_overrides: dict = None):
+    """Build + lower + compile one (arch, shape) on the given mesh.
+
+    Tuning knobs for the §Perf hillclimb: ``mesh`` may be any logical
+    reshaping of the production chips (e.g. (256,1) for a TP-free small
+    model), ``average_dtype`` sets the butterfly payload precision,
+    ``microbatch`` enables gradient accumulation, ``cfg_overrides`` patches
+    the ModelConfig (e.g. attention block sizes, moe_chunks).
+    """
+    cfg, variant = resolve_config(arch, shape_name)
+    if cfg is None:
+        return {"status": "skipped", "reason": variant}
+    if cfg_overrides:
+        cfg = cfg.variant(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            from repro.core.baselines import make_averager
+            from repro.core.group_allreduce import dp_axis_layout
+            from repro.optim import sgd
+            from repro.train import build_train_step, stacked_init
+
+            names, sizes = dp_axis_layout(
+                mesh.axis_names, dict(mesh.shape),
+                tuple(a for a in mesh.axis_names if a in ("pod", "data")))
+            kw = {}
+            if averager == "wagma":
+                kw["average_dtype"] = average_dtype
+                if group_size:
+                    kw["group_size"] = group_size
+            av = make_averager(averager, names, sizes, **kw)
+            opt = sgd(0.1, momentum=0.9)
+            params_sds, pspecs = stacked_init(model, mesh,
+                                              jax.random.PRNGKey(0),
+                                              abstract=True)
+            from repro.train.train_step import train_shardings, batch_shardings
+            opt_shapes = jax.eval_shape(lambda p: jax.vmap(opt.init)(p),
+                                        params_sds)
+            psh, osh = train_shardings(mesh, pspecs, opt_shapes, params_sds)
+            opt_sds = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                opt_shapes, osh)
+            batch = specs_lib.batch_specs(cfg, shape, mesh)
+            step = build_train_step(model, opt, av, mesh, phase=0, sync=False,
+                                    microbatch=microbatch)
+            lowered = step.lower(params_sds, opt_sds, batch)
+        elif shape.kind == "prefill":
+            params_sds = specs_lib.serve_params_specs(cfg, mesh)
+            batch = specs_lib.batch_specs(cfg, shape, mesh)
+
+            def prefill_fn(params, b):
+                return model.prefill(params, b, shape.seq_len)
+
+            lowered = jax.jit(prefill_fn).lower(params_sds, batch)
+        else:  # decode
+            params_sds, caches_sds, token, pos = specs_lib.decode_specs(
+                cfg, shape, mesh)
+
+            def serve_step(params, caches, tok, pos):
+                import jax.numpy as jnp
+                logits, caches = model.decode_step(params, caches, tok, pos)
+                nxt = jnp.argmax(logits[:, -1, :], -1).astype(tok.dtype)[:, None]
+                return nxt, caches
+
+            lowered = jax.jit(serve_step,
+                              donate_argnums=(1,) if donate else ()
+                              ).lower(params_sds, caches_sds, token, pos)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    halve = ["all-reduce"]
+    if average_dtype == "bfloat16":
+        halve.append("collective-permute")   # butterfly payload is bf16
+    colls = collective_summary(hlo, halve_kinds=tuple(halve))
+    n_dp = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n_dp *= mesh.shape[a]
+    n_model = mesh.shape.get("model", 1)
+    cm = cost_for(cfg, shape, shape.kind, n_dp=n_dp, n_model=n_model)
+    total_p, active_p = param_count(cfg)
+
+    return {
+        "status": "ok",
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "averager": averager if shape.kind == "train" else None,
+        "mesh": dict(mesh.shape),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total": (ma.argument_size_in_bytes
+                                 + ma.temp_size_in_bytes
+                                 + ma.output_size_in_bytes
+                                 - ma.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+            "note": "scan bodies counted once by XLA; see analytic model",
+        },
+        "collectives": colls,
+        "analytic": {
+            "flops_per_device": cm.flops_per_device,
+            "hbm_bytes_per_device": cm.hbm_bytes_per_device,
+            "model_flops_per_device": cm.model_flops,
+            "params_total": total_p,
+            "params_active": active_p,
+        },
+        "hlo_bytes": len(hlo),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--averager", default="wagma")
+    ap.add_argument("--group-size", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    archs = arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                pairs.append((arch, shape, mp))
+
+    results = []
+    for arch, shape, mp in pairs:
+        mesh = mesh_lib.make_production_mesh(multi_pod=mp)
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        if args.averager != "wagma":
+            tag += f"__{args.averager}"
+        print(f"=== {tag} ===", flush=True)
+        try:
+            res = lower_pair(arch, shape, mesh, averager=args.averager,
+                             group_size=args.group_size)
+        except Exception as e:
+            res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print("  ERROR:", res["error"], flush=True)
+        else:
+            if res["status"] == "ok":
+                mem = res["memory"]["per_device_total"] / 2**30
+                cw = res["collectives"]["total_wire_bytes"] / 2**20
+                print(f"  ok: compile={res['compile_s']}s "
+                      f"mem/dev={mem:.2f}GiB coll={cw:.1f}MiB "
+                      f"flops/dev={res['analytic']['flops_per_device']:.3e}",
+                      flush=True)
+            else:
+                print(f"  {res['status']}: {res.get('reason','')}", flush=True)
+        res["tag"] = tag
+        results.append(res)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2, default=str)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skipped={n_skip} error={n_err} "
+          f"of {len(results)}")
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump([{k: r.get(k) for k in
+                    ("tag", "status", "compile_s", "memory", "collectives",
+                     "analytic", "error")} for r in results], f, indent=2,
+                  default=str)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

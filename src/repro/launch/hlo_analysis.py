@@ -1,0 +1,200 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``cost_analysis()`` counts while-loop bodies once (see DESIGN.md §6b), so we
+walk the computation call graph, multiply collectives inside loop bodies by
+the loop trip count (recovered from jax's canonical scan condition
+``compare(iv, constant(N)), direction=LT``), and convert tensor sizes to
+per-device *wire bytes* with the standard algorithm factors:
+
+    all-reduce          2 * N * (g-1)/g     (ring / reduce-scatter+all-gather)
+    all-gather          N_out * (g-1)/g
+    reduce-scatter      N_in  * (g-1)/g
+    all-to-all          N * (g-1)/g
+    collective-permute  N                   (one send per device)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:                       # iota v2 form [ngroups,gsize]
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class Collective:
+    kind: str
+    tensor_bytes: int
+    group: int
+    count: int = 1              # after trip-count multiplication
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group, 1)
+        n = self.tensor_bytes
+        if self.kind == "all-reduce":
+            w = 2 * n * (g - 1) / g
+        elif self.kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            w = n * (g - 1) / g
+        else:                    # collective-permute
+            w = n
+        return w * self.count
+
+
+@dataclass
+class Computation:
+    name: str
+    collectives: List[Collective] = field(default_factory=list)
+    calls: List[Tuple[str, str, str]] = field(default_factory=list)  # (kind, callee, cond)
+    constants: List[int] = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation header (non-indented): `%name (...) -> ... {` / `ENTRY ...`
+        if not line.startswith(" ") and "->" in line and line.rstrip().endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        cm_ = _COLL_RE.search(stripped)
+        if cm_ and "=" in stripped:
+            kind = cm_.group(1)
+            rhs = stripped.split("=", 1)[1].strip()
+            # output shape precedes the op name; for all-gather this is the
+            # (larger) gathered tensor, matching the wire-cost formula input
+            nbytes = _tensor_bytes(rhs.split(kind)[0])
+            cur.collectives.append(
+                Collective(kind, nbytes, _group_size(stripped, 0)))
+        if " while(" in stripped:
+            mb = re.search(r"body=%?([\w.\-]+)", stripped)
+            mc = re.search(r"condition=%?([\w.\-]+)", stripped)
+            if mb:
+                cur.calls.append(("while", mb.group(1),
+                                  mc.group(1) if mc else ""))
+        if " fusion(" in stripped:
+            mm = re.search(r"calls=%?([\w.\-]+)", stripped)
+            if mm:
+                cur.calls.append(("call", mm.group(1), ""))
+        if " call(" in stripped:
+            mm = re.search(r"to_apply=%?([\w.\-]+)", stripped)
+            if mm:
+                cur.calls.append(("call", mm.group(1), ""))
+        if " conditional(" in stripped:
+            seg = stripped.split("branch_computations=", 1)
+            if len(seg) == 2:
+                blob = seg[1].split("}")[0]
+                for mm in re.finditer(r"%?([\w.\-]+)", blob):
+                    cur.calls.append(("call", mm.group(1), ""))
+            else:
+                for attr in ("true_computation", "false_computation"):
+                    mm = re.search(attr + r"=%?([\w.\-]+)", stripped)
+                    if mm:
+                        cur.calls.append(("call", mm.group(1), ""))
+        for mm in re.finditer(r"constant\((\d+)\)", stripped):
+            cur.constants.append(int(mm.group(1)))
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or not cond.constants:
+        return 1
+    return max(cond.constants)
+
+
+def collective_summary(hlo_text: str, default_group: int = 1,
+                       halve_kinds=("all-reduce",)) -> dict:
+    """Total per-device wire bytes by collective kind, loop-aware."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        entry = next(iter(comps)) if comps else None
+    totals: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    flags = {"unknown_trip": False}
+
+    def walk(name: str, mult: int, seen):
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return
+        seen = seen | {name}
+        for c in comp.collectives:
+            g = c.group if c.group else default_group
+            wb = Collective(c.kind, c.tensor_bytes, g).wire_bytes * mult
+            totals[c.kind] = totals.get(c.kind, 0.0) + wb
+            counts[c.kind] = counts.get(c.kind, 0) + mult
+        for kind, callee, cond in comp.calls:
+            if kind == "while":
+                trips = _trip_count(comps, cond) if cond else 1
+                if trips == 1:
+                    flags["unknown_trip"] = True
+                walk(callee, mult * trips, seen)
+            else:
+                walk(callee, mult, seen)
+
+    if entry:
+        walk(entry, 1, frozenset())
+    total = sum(totals.values())
+    # XLA-CPU widens bf16 collectives to f32 (all-reduce via the
+    # AllReducePromotion pass; collective-permute via generic f32 widening —
+    # both probed on jax 0.8.2). On TPU they stay bf16, so the TPU-adjusted
+    # estimate halves the bytes of ``halve_kinds`` (the kinds whose payload
+    # is bf16 in the source program; callers set this from the model /
+    # averaging dtype).
+    adjusted = total - sum(totals.get(k, 0.0) / 2 for k in halve_kinds)
+    return {
+        "wire_bytes_by_kind": totals,
+        "counts_by_kind": counts,
+        "total_wire_bytes": total,
+        "total_wire_bytes_tpu_adjusted": adjusted,
+        "halved_kinds": list(halve_kinds),
+        "unknown_trip_counts": flags["unknown_trip"],
+    }

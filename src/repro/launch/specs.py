@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) pair.
+
+``input_specs`` returns weak-type-correct, shardable abstract values — no
+device allocation — for train batches, prefill batches, and decode states.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.models.registry import build_model
+from repro.serve.decode import cache_shardings, serve_param_shardings
+
+
+def _dp_spec(mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sh = NamedSharding(mesh, spec) if mesh is not None and spec is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg, shape, mesh) -> dict:
+    """Abstract train/prefill batch for a model config + input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_spec(mesh)
+    b2 = lambda s: _sds(s, jnp.int32, mesh, P(dp, None))
+    out = {}
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        out["tokens"] = b2((B, s_text))
+        out["labels"] = b2((B, s_text))
+        out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), jnp.float32,
+                              mesh, P(dp, None, None))
+    elif cfg.family == "audio":
+        out["tokens"] = b2((B, S))
+        out["labels"] = b2((B, S))
+        if cfg.encoder_frames:
+            out["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model),
+                                 jnp.float32, mesh, P(dp, None, None))
+        else:
+            out["src"] = b2((B, 64))
+    else:
+        out["tokens"] = b2((B, S))
+        out["labels"] = b2((B, S))
+    return out
+
+
+def decode_specs(cfg, shape, mesh):
+    """(params, caches, token, pos) abstract values for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = serve_param_shardings(mesh, params_shapes)
+    params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_shapes, pshard)
+    cache_shapes = jax.eval_shape(lambda: model.init_caches(B, S))
+    cshard = cache_shardings(mesh, cache_shapes, B)
+    caches = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shapes, cshard)
+    dp = _dp_spec(mesh)
+    tok_spec = P(dp, None) if B % _dp_size(mesh) == 0 and B >= _dp_size(mesh) \
+        else P(None, None)
+    token = _sds((B, 1), jnp.int32, mesh, tok_spec)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, caches, token, pos
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= mesh.shape[a]
+    return n
+
+
+def serve_params_specs(cfg, mesh):
+    model = build_model(cfg)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = serve_param_shardings(mesh, params_shapes)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_shapes, pshard)

@@ -1,0 +1,153 @@
+"""Production training driver.
+
+Builds the mesh, model, optimiser, and averager; maintains the cache of
+compiled step variants (one per butterfly phase offset + the tau-sync step);
+streams synthetic data; logs metrics; checkpoints.
+
+Usage (CPU demo on forced host devices is in examples/; on a real pod run):
+
+    python -m repro.launch.train --arch tinyllama-1.1b --averager wagma \
+        --steps 500 --data-axis 16 --model-axis 16 [--multi-pod]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import InputShape
+from repro.core.baselines import make_averager
+from repro.core.group_allreduce import dp_axis_layout
+from repro.data import make_batch_fn
+from repro.models.registry import build_model
+from repro.optim import sgd, adamw, cosine_warmup
+from repro.train import build_train_step, stacked_init, dp_axes_of
+from repro.checkpoint import save_checkpoint, consolidate
+
+
+class Trainer:
+    def __init__(self, cfg, mesh, *, averager="wagma", group_size=None,
+                 tau=10, optimizer="sgd", learning_rate=0.1, momentum=0.9,
+                 seq_len=512, global_batch=None, seed=0, microbatch=None,
+                 imbalanced=False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        dp = dp_axes_of(mesh)
+        self.n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+        names, sizes = dp_axis_layout(mesh.axis_names, dict(mesh.shape), dp)
+        kw = {}
+        if averager == "wagma":
+            kw = {"group_size": group_size, "tau": tau}
+        elif averager == "local_sgd":
+            kw = {"sync_period": tau}
+        self.averager = make_averager(averager, names, sizes, **kw)
+        if optimizer == "sgd":
+            self.opt = sgd(learning_rate, momentum=momentum)
+        else:
+            self.opt = adamw(learning_rate)
+        self.shape = InputShape("custom", seq_len,
+                                global_batch or 8 * self.n_dp, "train")
+        self.batch_fn = make_batch_fn(cfg, self.shape, seed=seed,
+                                      imbalanced=imbalanced)
+        self.microbatch = microbatch
+        self._steps = {}
+        with jax.set_mesh(mesh):
+            self.params, self.pspecs = stacked_init(self.model, mesh,
+                                                    jax.random.PRNGKey(seed))
+            self.opt_state = jax.jit(
+                lambda p: jax.vmap(self.opt.init)(p))(self.params)
+        dp_spec = dp if len(dp) > 1 else dp[0]
+        self._batch_sharding = lambda v: NamedSharding(
+            mesh, P(dp_spec, *([None] * (v.ndim - 1))))
+
+    def _step_fn(self, t: int):
+        sync = self.averager.sync_due(t)
+        phase = self.averager.phase_for_step(t)
+        key = ("sync",) if sync else ("group", phase)
+        if key not in self._steps:
+            self._steps[key] = build_train_step(
+                self.model, self.opt, self.averager, self.mesh,
+                phase=phase, sync=sync, microbatch=self.microbatch)
+        return self._steps[key]
+
+    def _put_batch(self, t: int):
+        per = self.shape.global_batch
+        nb = self.batch_fn(t, 0, per)
+        return {k: jax.device_put(jnp.asarray(v), self._batch_sharding(
+            jnp.asarray(v))) for k, v in nb.items()}
+
+    def run(self, steps: int, log_every: int = 10, ckpt_dir=None,
+            ckpt_every=0):
+        history = []
+        with jax.set_mesh(self.mesh):
+            t0 = time.time()
+            for t in range(steps):
+                batch = self._put_batch(t)
+                step = self._step_fn(t)
+                self.params, self.opt_state, metrics = step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                history.append(loss)
+                if log_every and (t % log_every == 0 or t == steps - 1):
+                    dt = time.time() - t0
+                    tput = self.shape.global_batch * self.shape.seq_len \
+                        * (t + 1) / max(dt, 1e-9)
+                    print(f"step {t:5d} loss {loss:.4f} "
+                          f"({tput:,.0f} tok/s wall)", flush=True)
+                if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
+                    save_checkpoint(ckpt_dir, jax.device_get(self.params),
+                                    step=t + 1)
+        return history
+
+    def consolidated(self):
+        return consolidate(jax.device_get(self.params))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--averager", default="wagma")
+    ap.add_argument("--group-size", type=int, default=None)
+    ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--data-axis", type=int, default=None)
+    ap.add_argument("--model-axis", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--imbalanced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.data_axis:
+        mesh = jax.make_mesh((args.data_axis, args.model_axis or 1),
+                             ("data", "model"))
+    else:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tr = Trainer(cfg, mesh, averager=args.averager,
+                 group_size=args.group_size, tau=args.tau,
+                 optimizer=args.optimizer, learning_rate=args.lr,
+                 seq_len=args.seq_len, global_batch=args.global_batch,
+                 microbatch=args.microbatch, imbalanced=args.imbalanced)
+    hist = tr.run(args.steps, ckpt_dir=args.ckpt_dir,
+                  ckpt_every=50 if args.ckpt_dir else 0)
+    print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

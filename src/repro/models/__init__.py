@@ -1,0 +1,5 @@
+"""Functional JAX model zoo (params = nested dicts; scan-over-layers HLO)."""
+
+from repro.models.registry import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,185 @@
+"""Uniform model API over the zoo: build_model(cfg) -> ModelAPI.
+
+Batch format (produced by data/ and launch/input_specs):
+    dense/moe/ssm/hybrid : {tokens (B,S), labels (B,S)}
+    vlm                  : + {patches (B,Np,d)}  — labels cover text positions
+    audio (whisper)      : {frames (B,F,d), tokens, labels}
+    encdec (wmt)         : {src (B,F), tokens, labels}
+
+``loss(params, batch)`` returns (scalar_loss, metrics) and folds MoE aux
+losses in with cfg.router_aux_coef.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import encdec, moe, rglru, transformer as tfm, vlm, xlstm
+
+
+class ModelAPI(NamedTuple):
+    cfg: Any
+    init: Callable                  # key -> params
+    forward: Callable               # (params, batch, remat=True) -> (logits, aux)
+    loss: Callable                  # (params, batch, remat=True) -> (loss, metrics)
+    init_caches: Callable           # (batch, max_len) -> caches
+    prefill: Callable               # (params, batch, max_len) -> (logits, caches)
+    decode_step: Callable           # (params, caches, token, pos) -> (logits, caches)
+
+
+def _dense_fwd(mod):
+    def fwd(cfg, params, batch, remat=True):
+        logits = mod.forward(cfg, params, batch["tokens"], remat=remat)
+        if isinstance(logits, tuple):
+            return logits
+        return logits, {}
+    return fwd
+
+
+def build_model(cfg) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense",):
+        mod, fwd = tfm, _dense_fwd(tfm)
+        pf = lambda cfg, p, b, ml, remat=True: tfm.prefill(
+            cfg, p, b["tokens"], max_len=ml, remat=remat)
+        dec = lambda cfg, p, c, tok, pos: tfm.decode_step(cfg, p, c, tok, pos)
+        caches = tfm.init_caches
+        text_slice = None
+    elif fam == "moe":
+        mod = moe
+        fwd = lambda cfg, p, b, remat=True: moe.forward(
+            cfg, p, b["tokens"], remat=remat)
+        pf = lambda cfg, p, b, ml, remat=True: moe.prefill(
+            cfg, p, b["tokens"], max_len=ml, remat=remat)
+        dec = lambda cfg, p, c, tok, pos: moe.decode_step(cfg, p, c, tok, pos)
+        caches = moe.init_caches
+        text_slice = None
+    elif fam == "ssm":
+        mod = xlstm
+        fwd = lambda cfg, p, b, remat=True: xlstm.forward(
+            cfg, p, b["tokens"], remat=remat)
+        pf = lambda cfg, p, b, ml, remat=True: xlstm.prefill(
+            cfg, p, b["tokens"], remat=remat)
+        dec = lambda cfg, p, c, tok, pos: xlstm.decode_step(cfg, p, c, tok, pos)
+        caches = xlstm.init_caches
+        text_slice = None
+    elif fam == "hybrid":
+        mod = rglru
+        fwd = lambda cfg, p, b, remat=True: rglru.forward(
+            cfg, p, b["tokens"], remat=remat)
+        pf = lambda cfg, p, b, ml, remat=True: rglru.prefill(
+            cfg, p, b["tokens"], max_len=ml, remat=remat)
+        dec = lambda cfg, p, c, tok, pos: rglru.decode_step(cfg, p, c, tok, pos)
+        caches = rglru.init_caches
+        text_slice = None
+    elif fam == "audio":
+        mod = encdec
+        fwd = lambda cfg, p, b, remat=True: encdec.forward(
+            cfg, p, b["tokens"], enc_input=b.get("frames", b.get("src")),
+            remat=remat)
+        pf = lambda cfg, p, b, ml, remat=True: encdec.prefill(
+            cfg, p, b["tokens"], enc_input=b.get("frames", b.get("src")),
+            max_len=ml, remat=remat)
+        dec = lambda cfg, p, c, tok, pos: encdec.decode_step(cfg, p, c, tok, pos)
+        caches = encdec.init_caches
+        text_slice = None
+    elif fam == "vlm":
+        mod = vlm
+        fwd = lambda cfg, p, b, remat=True: vlm.forward(
+            cfg, p, b["tokens"], prefix_embeds=b["patches"], remat=remat)
+        pf = lambda cfg, p, b, ml, remat=True: vlm.prefill(
+            cfg, p, b["tokens"], max_len=ml, prefix_embeds=b["patches"],
+            remat=remat)
+        dec = lambda cfg, p, c, tok, pos: vlm.decode_step(cfg, p, c, tok, pos)
+        caches = vlm.init_caches
+        text_slice = cfg.n_patches
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def chunked_ce(params, hidden, labels, mask):
+        """Big-vocab memory saver: the (B,S,V) fp32 logits of a 262k vocab
+        dominate the training live-set (~13 GiB/device on gemma3-12b), so
+        the CE runs over rematerialised sequence chunks — the full logits
+        tensor never exists."""
+        import jax
+        B, S = labels.shape
+        chunks = 8
+        while S % chunks:
+            chunks -= 1
+        Sc = S // chunks
+        xs = hidden.reshape(B, chunks, Sc, -1).swapaxes(0, 1)   # (c,B,Sc,D)
+        ls = labels.reshape(B, chunks, Sc).swapaxes(0, 1)
+        ms = (mask.reshape(B, chunks, Sc).swapaxes(0, 1) if mask is not None
+              else jnp.ones((chunks, B, Sc), jnp.float32))
+
+        def body(carry, inp):
+            xc, lc, mc = inp
+            logits = tfm.unembed(cfg, params, xc).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            lab = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            nll = (lse - lab) * mc
+            tot, cnt = carry
+            return (tot + nll.sum(), cnt + mc.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.remat(body),
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xs, ls, ms))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # big-vocab families where forward can hand back hidden states
+    chunked_families = {"dense", "moe", "hybrid", "vlm"}
+    use_chunked_ce = fam in chunked_families and cfg.vocab_padded >= 65536
+
+    def loss_fn(params, batch, remat=True):
+        if use_chunked_ce:
+            if fam == "moe":
+                hidden, aux = moe.forward(cfg, params, batch["tokens"],
+                                          remat=remat, return_hidden=True)
+            elif fam == "hybrid":
+                hidden, aux = rglru.forward(cfg, params, batch["tokens"],
+                                            remat=remat, return_hidden=True)
+            elif fam == "vlm":
+                hidden = tfm.forward(cfg, params, batch["tokens"],
+                                     prefix_embeds=batch["patches"],
+                                     remat=remat, return_hidden=True)
+                aux = {}
+            else:
+                hidden = tfm.forward(cfg, params, batch["tokens"],
+                                     remat=remat, return_hidden=True)
+                aux = {}
+            if text_slice:
+                hidden = hidden[:, text_slice:]
+            ce = chunked_ce(params, hidden, batch["labels"],
+                            batch.get("mask"))
+        else:
+            logits, aux = fwd(cfg, params, batch, remat=remat)
+            if text_slice:
+                logits = logits[:, text_slice:]
+            ce = cm.softmax_cross_entropy(logits, batch["labels"],
+                                          batch.get("mask"))
+        total = ce
+        metrics = {"ce": ce}
+        for name in ("load_balance", "router_z"):
+            if name in aux:
+                total = total + cfg.router_aux_coef * aux[name]
+                metrics[name] = aux[name]
+        if "dropped" in aux:
+            metrics["moe_dropped"] = aux["dropped"]
+        metrics["loss"] = total
+        return total, metrics
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: mod.init_params(cfg, key),
+        forward=lambda params, batch, remat=True: fwd(cfg, params, batch, remat),
+        loss=loss_fn,
+        init_caches=lambda batch, max_len: caches(cfg, batch, max_len),
+        prefill=(lambda params, batch, max_len, remat=True:
+                 pf(cfg, params, batch, max_len, remat)) if pf else None,
+        decode_step=lambda params, c, tok, pos: dec(cfg, params, c, tok, pos),
+    )

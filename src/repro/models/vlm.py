@@ -1,0 +1,39 @@
+"""InternVL2-2B language backbone (InternLM2-1.8B-style) with a stubbed
+vision frontend (per assignment): ``input_specs`` supplies precomputed
+InternViT patch embeddings (B, n_patches, d_model) that are prepended to the
+token embeddings. Loss is masked to the text positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+
+
+def init_params(cfg, key):
+    return tfm.init_params(cfg, key)
+
+
+def forward(cfg, params, tokens, prefix_embeds=None, remat: bool = True):
+    logits = tfm.forward(cfg, params, tokens, prefix_embeds=prefix_embeds,
+                         remat=remat)
+    return logits, {}
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    # cache must also hold the vision prefix
+    return tfm.init_caches(cfg, batch, max_len + cfg.n_patches)
+
+
+def prefill(cfg, params, tokens, max_len=None, prefix_embeds=None,
+            remat: bool = True):
+    max_len = (max_len or tokens.shape[1]) + cfg.n_patches
+    return tfm.prefill(cfg, params, tokens, max_len=max_len,
+                       prefix_embeds=prefix_embeds, remat=remat)
+
+
+def decode_step(cfg, params, caches, token, pos, prefix_embeds=None):
+    # pos is the absolute position incl. the vision prefix
+    return tfm.decode_step(cfg, params, caches, token, pos)

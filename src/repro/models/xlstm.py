@@ -1,0 +1,242 @@
+"""xLSTM (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+Config ``xlstm-350m``: 24 layers, d_model=1024, 4 heads, no FFN (d_ff=0) —
+the block-internal up/down projections carry the MLP role.
+
+* mLSTM — matrix-memory LSTM with exponential gating. State per head:
+  C (dh x dh), n (dh), m (scalar stabiliser). Implemented as a sequential
+  ``lax.scan`` over time (compact HLO; the chunked-parallel/MXU form is the
+  §Perf / Pallas follow-up — see DESIGN.md).
+* sLSTM — scalar-memory LSTM with recurrent (per-head block-diagonal) weights;
+  inherently sequential (the paper's own point), scanned over time.
+
+Decode carries the recurrent state — ``long_500k`` runs natively with O(1)
+state per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+PROJ_FACTOR = 2   # mLSTM inner width = 2 * d_model
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg, key, dtype):
+    d = cfg.d_model
+    di = PROJ_FACTOR * d
+    ks = cm.split(key, 7)
+    return {
+        "ln": {"scale": jnp.zeros((d,), dtype)},
+        "w_up": cm.dense_init(ks[0], d, 2 * di, dtype),    # [inner | z gate]
+        "wq": cm.dense_init(ks[1], di, di, dtype),
+        "wk": cm.dense_init(ks[2], di, di, dtype),
+        "wv": cm.dense_init(ks[3], di, di, dtype),
+        "wif": cm.dense_init(ks[4], di, 2 * cfg.n_heads, dtype, scale=0.01),
+        "bif": jnp.tile(jnp.asarray([0.0, 3.0], jnp.float32), cfg.n_heads),
+        "w_down": cm.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def init_slstm(cfg, key, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = cm.split(key, 3)
+    return {
+        "ln": {"scale": jnp.zeros((d,), dtype)},
+        "wg": cm.dense_init(ks[0], d, 4 * d, dtype),       # z,i,f,o gates
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+              * (1.0 / jnp.sqrt(dh))).astype(dtype),       # recurrent, per head
+        "bg": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                               jnp.full((d,), 3.0, jnp.float32),
+                               jnp.zeros((d,), jnp.float32)]),
+        "w_down": cm.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    assert cfg.n_layers % 2 == 0
+    n_sb = cfg.n_layers // 2
+    ks = cm.split(key, 3)
+    blocks = {
+        "mlstm": jax.vmap(lambda k: init_mlstm(cfg, k, dtype))(cm.split(ks[0], n_sb)),
+        "slstm": jax.vmap(lambda k: init_slstm(cfg, k, dtype))(cm.split(ks[1], n_sb)),
+    }
+    return {
+        "emb": cm.embed_init(ks[2], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": blocks,
+        "ln_f": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_preacts(cfg, p, x):
+    b, s, d = x.shape
+    H = cfg.n_heads
+    di = PROJ_FACTOR * d
+    dh = di // H
+    h = cm.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    inner, z = jnp.split(up, 2, axis=-1)
+    q = (inner @ p["wq"]).reshape(b, s, H, dh)
+    k = (inner @ p["wk"]).reshape(b, s, H, dh) / jnp.sqrt(float(dh)).astype(x.dtype)
+    v = (inner @ p["wv"]).reshape(b, s, H, dh)
+    gates = (inner @ p["wif"]).astype(jnp.float32) + p["bif"]
+    i_pre, f_pre = gates.reshape(b, s, H, 2)[..., 0], gates.reshape(b, s, H, 2)[..., 1]
+    return q, k, v, i_pre, f_pre, z
+
+
+def mlstm_step(state, qkvif):
+    """One timestep; state = (C (B,H,dh,dh), n (B,H,dh), m (B,H))."""
+    C, n, m = state
+    q, k, v, i_pre, f_pre = qkvif
+    logf = jax.nn.log_sigmoid(f_pre)                       # (B,H)
+    m_new = jnp.maximum(logf + m, i_pre)
+    decay = jnp.exp(logf + m - m_new)
+    inp = jnp.exp(i_pre - m_new)
+    q32, k32, v32 = (a.astype(jnp.float32) for a in (q, k, v))
+    C = decay[..., None, None] * C + inp[..., None, None] * (
+        v32[..., :, None] * k32[..., None, :])             # v outer k
+    n = decay[..., None] * n + inp[..., None] * k32
+    num = jnp.einsum("bhij,bhj->bhi", C, q32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q32)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_block(cfg, p, x, state=None):
+    """x (B,S,d) -> (out, final_state). Sequential scan over time."""
+    b, s, d = x.shape
+    H = cfg.n_heads
+    dh = PROJ_FACTOR * d // H
+    q, k, v, i_pre, f_pre, z = _mlstm_preacts(cfg, p, x)
+    if state is None:
+        state = (jnp.zeros((b, H, dh, dh), jnp.float32),
+                 jnp.zeros((b, H, dh), jnp.float32),
+                 jnp.full((b, H), -1e30, jnp.float32))
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0),
+                      (q, k, v, i_pre, f_pre))
+    state, hs = jax.lax.scan(mlstm_step, state, xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, -1)          # (B,S,di)
+    out = (hs.astype(x.dtype) * jax.nn.silu(z)) @ p["w_down"]
+    return x + out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_step_fn(p, H, dh):
+    r = p["r"].astype(jnp.float32)
+
+    def step(state, x_gates):
+        c, n, m, h_prev = state                            # (B,H,dh) x3, h (B,H,dh)
+        rec = jnp.einsum("bhd,hdf->bhf", h_prev, r)        # (B,H,4dh)
+        g = x_gates + rec
+        z, i_pre, f_pre, o_pre = jnp.split(g, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        decay = jnp.exp(logf + m - m_new)
+        inp = jnp.exp(i_pre - m_new)
+        c = decay * c + inp * jnp.tanh(z)
+        n = decay * n + inp
+        h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    return step
+
+
+def slstm_block(cfg, p, x, state=None):
+    b, s, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    hnorm = cm.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    gates = (hnorm @ p["wg"]).astype(jnp.float32) + p["bg"]
+    gates = gates.reshape(b, s, H, 4 * dh)
+    if state is None:
+        zero = jnp.zeros((b, H, dh), jnp.float32)
+        state = (zero, zero, jnp.full((b, H, dh), -1e30, jnp.float32), zero)
+    xs = jnp.moveaxis(gates, 1, 0)
+    state, hs = jax.lax.scan(slstm_step_fn(p, H, dh), state, xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    return x + hs.astype(x.dtype) @ p["w_down"], state
+
+
+# ---------------------------------------------------------------------------
+# Forward / serving
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, tokens, prefix_embeds=None, remat: bool = True):
+    x = tfm.embed(cfg, params, tokens)
+
+    def sb(x, bp):
+        x, _ = mlstm_block(cfg, bp["mlstm"], x)
+        x, _ = slstm_block(cfg, bp["slstm"], x)
+        return x, None
+
+    body = jax.remat(lambda x, bp: sb(x, bp)) if remat else sb
+    x, _ = jax.lax.scan(lambda c, b_: body(c, b_), x, params["blocks"])
+    x = cm.rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    return tfm.unembed(cfg, params, x), {}
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    """Recurrent state; max_len irrelevant (O(1) per-token state)."""
+    n_sb = cfg.n_layers // 2
+    H = cfg.n_heads
+    d = cfg.d_model
+    dhm = PROJ_FACTOR * d // H
+    dhs = d // H
+    zero = lambda *shape: jnp.zeros((n_sb,) + shape, jnp.float32)
+    return {
+        "mlstm": (zero(batch, H, dhm, dhm), zero(batch, H, dhm),
+                  jnp.full((n_sb, batch, H), -1e30, jnp.float32)),
+        "slstm": (zero(batch, H, dhs), zero(batch, H, dhs),
+                  jnp.full((n_sb, batch, H, dhs), -1e30, jnp.float32),
+                  zero(batch, H, dhs)),
+    }
+
+
+def decode_step(cfg, params, caches, token, pos, prefix_embeds=None):
+    x = tfm.embed(cfg, params, token)      # (B,1,d)
+
+    def sb(x, args):
+        bp, ms, ss = args
+        x, ms = mlstm_block(cfg, bp["mlstm"], x, state=ms)
+        x, ss = slstm_block(cfg, bp["slstm"], x, state=ss)
+        return x, (ms, ss)
+
+    x, (ms, ss) = jax.lax.scan(
+        sb, x, (params["blocks"], caches["mlstm"], caches["slstm"]))
+    x = cm.rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    return tfm.unembed(cfg, params, x), {"mlstm": ms, "slstm": ss}
+
+
+def prefill(cfg, params, tokens, max_len=None, prefix_embeds=None,
+            remat: bool = True):
+    """Run the prompt through, returning final state as the 'cache'."""
+    x = tfm.embed(cfg, params, tokens)
+
+    def sb(x, bp):
+        x, ms = mlstm_block(cfg, bp["mlstm"], x)
+        x, ss = slstm_block(cfg, bp["slstm"], x)
+        return x, (ms, ss)
+
+    body = jax.remat(sb) if remat else sb
+    x, (ms, ss) = jax.lax.scan(lambda c, b_: body(c, b_), x, params["blocks"])
+    x = cm.rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+    logits = tfm.unembed(cfg, params, x[:, -1:])
+    return logits, {"mlstm": ms, "slstm": ss}

@@ -1,0 +1,13 @@
+"""Pure-JAX first-order optimisers (no external deps).
+
+Optax-like interface:  opt.init(params) -> state;
+opt.update(grads, state, params) -> (new_params, new_state).
+The update *applies* the step (returns new params) because WAGMA averages the
+updated weights W' = W + U(G) (paper Alg. 2 line 6-7).
+"""
+
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+from repro.optim.schedule import constant, cosine_warmup
+
+__all__ = ["sgd", "adamw", "constant", "cosine_warmup"]

@@ -1,0 +1,54 @@
+"""AdamW with float32 moments (used by the Transformer/LLM configs)."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def adamw(learning_rate: Union[float, Callable], b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamWState, params):
+        count = state.count + 1
+        lr = jnp.asarray(lr_fn(count), jnp.float32)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def step(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu_new = b1 * mu + (1 - b1) * g32
+            nu_new = b2 * nu + (1 - b2) * jnp.square(g32)
+            upd = (mu_new / c1) / (jnp.sqrt(nu_new / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                upd = upd + weight_decay * p32
+            return (p32 - lr * upd).astype(p.dtype), mu_new, nu_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        new = [step(*a) for a in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        unf = lambda i: treedef.unflatten([n[i] for n in new])
+        return unf(0), AdamWState(mu=unf(1), nu=unf(2), count=count)
+
+    return Optimizer(init=init, update=update)

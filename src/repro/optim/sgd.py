@@ -1,0 +1,53 @@
+"""SGD with (Nesterov) momentum — the paper's optimiser for all three tasks.
+
+Momentum buffers are kept in float32 regardless of the parameter dtype
+(mixed-precision-safe); weight decay is decoupled (applied to weights, not
+folded into the momentum), matching common large-batch recipes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: object   # pytree like params, float32
+    count: jnp.ndarray
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def sgd(learning_rate: Union[float, Callable], momentum: float = 0.9,
+        nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return SGDState(momentum=mom, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params):
+        lr = jnp.asarray(lr_fn(state.count), jnp.float32)
+
+        def step(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g32
+            upd = (g32 + momentum * m_new) if nesterov else m_new
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        new = [step(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        new_p = treedef.unflatten([a for a, _ in new])
+        new_m = treedef.unflatten([b for _, b in new])
+        return new_p, SGDState(momentum=new_m, count=state.count + 1)
+
+    return Optimizer(init=init, update=update)

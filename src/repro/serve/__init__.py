@@ -1,0 +1,3 @@
+from repro.serve.decode import build_serve_step, build_prefill, cache_shardings
+
+__all__ = ["build_serve_step", "build_prefill", "cache_shardings"]

@@ -1,0 +1,103 @@
+"""Serving: prefill + single-token decode steps (pure pjit/GSPMD — WAGMA is a
+training-time technique; serving uses the consolidated/replicated weights).
+
+Decode shapes lower ``serve_step``: ONE new token against a ``seq_len`` KV
+cache. Sharding strategy:
+
+* batch >= n_dp     -> cache batch dim sharded over (pod, data)
+* batch == 1 (long_500k) -> KV *sequence* dim sharded over (pod, data):
+  flash-decoding-style distributed attention; GSPMD partitions the softmax
+  max/sum reductions over the sharded key axis.
+* q/kv heads + head_dim placed on the ``model`` axis via the weight specs;
+  recurrent (SSM/RG-LRU) states shard their channel dim over ``model``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+
+
+def _dp(mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return dp if len(dp) > 1 else dp[0]
+
+
+def cache_shardings(mesh, cache_shapes, batch: int, model_axis="model"):
+    """Sharding tree for cache pytrees (family-agnostic heuristics).
+
+    KV caches are rank>=5 ``(..., B, S, KH, hd)``; recurrent states are
+    rank 3-5 with B in position 1. We shard B over dp when divisible, else
+    the largest seq-like dim; KH goes on the model axis when divisible,
+    else hd.
+    """
+    dp = _dp(mesh)
+    n_dp = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= mesh.shape[a]
+    n_model = mesh.shape.get(model_axis, 1)
+
+    def spec(leaf):
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        # locate batch dim: first dim equal to `batch` after leading stack dims
+        b_idx = None
+        for i, s in enumerate(shape):
+            if s == batch and i >= 1 or (i == 0 and len(shape) <= 2 and s == batch):
+                b_idx = i
+                break
+        if b_idx is not None and batch % n_dp == 0 and batch >= n_dp:
+            entries[b_idx] = dp
+        else:
+            # shard the largest remaining dim over dp (seq for KV caches)
+            cand = max(range(len(shape)), key=lambda i: shape[i])
+            if shape[cand] % n_dp == 0 and (b_idx is None or cand != b_idx):
+                entries[cand] = dp
+        # model axis: last dim (hd / channel) if divisible and not tiny
+        for i in range(len(shape) - 1, -1, -1):
+            if entries[i] is None and shape[i] % n_model == 0 \
+                    and shape[i] >= n_model and i != b_idx:
+                entries[i] = model_axis
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(spec, cache_shapes,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def serve_param_shardings(mesh, params_shapes):
+    specs = cm.tree_specs(params_shapes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_serve_step(model, mesh, *, greedy: bool = True):
+    """jit'd serve_step(params, caches, token (B,1), pos) ->
+    (next_token (B,1), logits, caches)."""
+
+    vocab = model.cfg.vocab
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = model.decode_step(params, caches, token, pos)
+        # mask vocab-padding columns (table padded to /256 for sharding)
+        mask = jnp.arange(logits.shape[-1]) < vocab
+        logits = jnp.where(mask, logits, cm.NEG_INF)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(token.dtype)[:, None]
+        return nxt, logits, caches
+
+    return jax.jit(serve_step, donate_argnums=(1,))
+
+
+def build_prefill(model, mesh, max_len: int, remat: bool = True):
+    if model.prefill is None:
+        return None
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len, remat)
+
+    return jax.jit(prefill_step)

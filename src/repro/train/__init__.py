@@ -1,0 +1,5 @@
+from repro.train.train_step import (build_train_step, stacked_init,
+                                    train_shardings, dp_axes_of)
+
+__all__ = ["build_train_step", "stacked_init", "train_shardings",
+           "dp_axes_of"]

@@ -1,0 +1,185 @@
+"""Distributed WAGMA-SGD train step.
+
+Topology: ``jax.shard_map`` *manual* over the data-parallel mesh axes
+(``pod``, ``data``) — local gradients, local optimiser step, then the
+averager's collective (group butterfly / global psum / gossip) — and *auto*
+(GSPMD) over the ``model`` axis for tensor/expert parallelism inside each
+replica.
+
+Because model averaging needs **divergent per-replica weights**, params and
+optimiser state carry a leading dp-replica axis of size P_dp, sharded over
+(pod, data): global arrays are (P_dp, ...) and each replica sees its own
+slice (squeezed inside the manual region). Per-device memory equals classic
+replicated data parallelism. See DESIGN.md §2 for the FSDP tension and the
+hierarchical-WAGMA mitigation.
+
+The group pattern of iteration t is static per compiled variant: the host
+loop calls ``step_for(t)`` which dispatches to one of
+``averager.n_phases + 1`` cached jitted functions (+1 = the tau-sync step).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.group_allreduce import dp_axis_layout
+from repro.models import common as cm
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _dp_spec(mesh):
+    dp = dp_axes_of(mesh)
+    return dp if len(dp) > 1 else dp[0]
+
+
+def stacked_init(model, mesh, key, abstract: bool = False):
+    """Per-replica-divergent params: leading dp axis of size P_dp.
+
+    abstract=True returns ShapeDtypeStructs with shardings (for dry-run).
+    """
+    dp = dp_axes_of(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    shapes = jax.eval_shape(model.init, key)
+    model_specs = cm.tree_specs(shapes)
+    dp_spec = _dp_spec(mesh)
+
+    def full_spec(spec):
+        return P(dp_spec, *spec)
+
+    specs = jax.tree.map(full_spec, model_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    if abstract:
+        tree = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                (n_dp,) + s.shape, s.dtype,
+                sharding=NamedSharding(mesh, sp)),
+            shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        return tree, specs
+
+    params0 = model.init(key)
+
+    def rep(a, sp):
+        out = jnp.broadcast_to(a[None], (n_dp,) + a.shape)
+        return jax.device_put(out, NamedSharding(mesh, sp))
+
+    return jax.tree.map(rep, params0, specs), specs
+
+
+def build_train_step(model, optimizer, averager, mesh, *, phase: int,
+                     sync: bool, microbatch: Optional[int] = None,
+                     remat: bool = True):
+    """Returns jitted step(stacked_params, stacked_opt, batch) ->
+    (params, opt, metrics)."""
+    dp = dp_axes_of(mesh)
+    dp_spec = _dp_spec(mesh)
+
+    def replica_fn(params, opt_state, batch):
+        def loss_fn(p, mb):
+            loss, metrics = model.loss(p, mb, remat=remat)
+            return loss, metrics
+
+        if microbatch and microbatch > 1:
+            b_local = jax.tree.leaves(batch)[0].shape[0]
+            if b_local % microbatch or b_local < microbatch:
+                raise ValueError(
+                    f"microbatch={microbatch} must divide the per-replica "
+                    f"batch {b_local}")
+
+            def split(a):
+                return a.reshape((microbatch, a.shape[0] // microbatch)
+                                 + a.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics_all = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if averager.grad_comm:
+            grads = (averager.sync(grads) if sync
+                     else averager.comm(grads, phase))
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        if not averager.grad_comm:
+            new_params = (averager.sync(new_params) if sync
+                          else averager.comm(new_params, phase))
+        metrics = {k: jax.lax.pmean(v.astype(jnp.float32), dp)
+                   for k, v in metrics.items()}
+        return new_params, new_opt, metrics
+
+    squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+    expand = lambda t: jax.tree.map(lambda a: a[None], t)
+
+    def step(stacked_params, stacked_opt, batch):
+        p, o, m = replica_fn(squeeze(stacked_params), squeeze(stacked_opt),
+                             batch)
+        return expand(p), expand(o), m
+
+    lead = P(dp_spec)
+    sm = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(lead, lead, lead),
+        out_specs=(lead, lead, P()),
+        axis_names=set(dp), check_vma=False,
+    )
+    return jax.jit(sm, donate_argnums=(0, 1))
+
+
+def train_shardings(mesh, param_specs, opt_state_shapes, params_shapes):
+    """NamedSharding trees for (params, opt_state) given the param specs.
+
+    Momentum/mu/nu leaves have the same (stacked) shapes as params and take
+    the matching param spec; scalar counts take P(dp).
+    """
+    dp_spec = _dp_spec(mesh)
+    spec_by_shape = {}
+    for sp, sh in zip(
+            jax.tree.leaves(param_specs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(params_shapes,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))):
+        spec_by_shape.setdefault(tuple(sh.shape), sp)
+
+    def opt_spec(leaf):
+        sp = spec_by_shape.get(tuple(leaf.shape))
+        if sp is None:
+            sp = P(*([dp_spec] + [None] * (len(leaf.shape) - 1))) \
+                if len(leaf.shape) >= 1 else P()
+        return sp
+
+    opt_specs = jax.tree.map(opt_spec, opt_state_shapes,
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    to_ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return to_ns(param_specs), to_ns(opt_specs)
+
+
+def batch_shardings(mesh, batch_shapes):
+    """Batch arrays shard axis 0 (global batch) over the dp axes."""
+    dp_spec = _dp_spec(mesh)
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(dp_spec, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(spec, batch_shapes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,83 @@
+"""Loop-aware HLO collective parser: synthetic fixtures + shape parsing."""
+
+import textwrap
+
+from repro.launch.hlo_analysis import (_tensor_bytes, collective_summary)
+
+
+FIXTURE = textwrap.dedent("""\
+    HloModule jit_step, entry_computation_layout={()->()}
+
+    %add.1 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %body.1 (p: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+      %p = (s32[], f32[16,64]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[16,64] get-tuple-element(%p), index=1
+      %ar = f32[16,64]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add.1
+      %one = s32[] constant(1)
+      %iv2 = s32[] add(%iv, %one)
+      ROOT %t = (s32[], f32[16,64]) tuple(%iv2, %ar)
+    }
+
+    %cond.1 (p: (s32[], f32[16,64])) -> pred[] {
+      %p = (s32[], f32[16,64]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%iv, %n), direction=LT
+    }
+
+    ENTRY %main (x: f32[16,64]) -> f32[16,64] {
+      %x = f32[16,64]{1,0} parameter(0)
+      %cp = f32[16,64]{1,0} collective-permute(%x), source_target_pairs={{0,1},{1,0}}
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[16,64]) tuple(%zero, %cp)
+      %w = (s32[], f32[16,64]) while(%t0), condition=%cond.1, body=%body.1
+      %y = f32[16,64] get-tuple-element(%w), index=1
+      %ag = f32[64,64]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+      ROOT %out = f32[16,64]{1,0} slice(%ag), slice={[0:16], [0:64]}
+    }
+""")
+
+
+def test_tensor_bytes():
+    assert _tensor_bytes("f32[16,64]") == 16 * 64 * 4
+    assert _tensor_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert _tensor_bytes("(f32[4], s32[2,2])") == 16 + 16
+    assert _tensor_bytes("pred[]") == 0 or _tensor_bytes("pred[]") == 1
+
+
+def test_collective_summary_loop_aware():
+    s = collective_summary(FIXTURE)
+    n = 16 * 64 * 4
+    by = s["wire_bytes_by_kind"]
+    counts = s["counts_by_kind"]
+    # collective-permute: once, full payload
+    assert by["collective-permute"] == n
+    # all-reduce inside the while: 12 trips, group of 4 -> 2*N*(3/4) each
+    assert counts["all-reduce"] == 12
+    assert abs(by["all-reduce"] - 12 * 2 * n * 3 / 4) < 1e-6
+    # all-gather of the 4x output: N_out*(g-1)/g once
+    assert abs(by["all-gather"] - (64 * 64 * 4) * 3 / 4) < 1e-6
+    assert not s["unknown_trip_counts"]
+
+
+def test_unknown_trip_flagged():
+    no_const = FIXTURE.replace("%n = s32[] constant(12)",
+                               "%n = s32[] parameter(1)").replace(
+        "(p: (s32[], f32[16,64])) -> pred[] {",
+        "(p: (s32[], f32[16,64]), q: s32[]) -> pred[] {", 1)
+    s = collective_summary(no_const)
+    assert s["unknown_trip_counts"]
+    assert s["counts_by_kind"]["all-reduce"] == 1
+
+
+def test_tpu_adjusted_halves_allreduce():
+    s = collective_summary(FIXTURE)
+    ar = s["wire_bytes_by_kind"]["all-reduce"]
+    assert abs(s["total_wire_bytes"] - s["total_wire_bytes_tpu_adjusted"]
+               - ar / 2) < 1e-6

@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+ATTN_CASES = [
+    # (b, sq, sk, h, kh, hd, causal, window, dtype)
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 256, 4, 4, 32, True, 64, jnp.float32),
+    (2, 100, 100, 2, 1, 64, False, None, jnp.float32),
+    (1, 128, 256, 4, 2, 128, True, None, jnp.float32),
+    (1, 64, 64, 2, 2, 64, True, None, jnp.bfloat16),
+    (1, 72, 72, 3, 1, 48, True, 16, jnp.float32),   #非-128-aligned
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_allclose(case):
+    b, sq, sk, h, kh, hd, causal, window, dtype = case
+    q = randn(b, sq, h, hd, dtype=dtype)
+    k = randn(b, sk, kh, hd, dtype=dtype)
+    v = randn(b, sk, kh, hd, dtype=dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_blocked_attention():
+    from repro.models.common import blocked_attention
+    q = randn(2, 96, 4, 64)
+    k = randn(2, 96, 2, 64)
+    v = randn(2, 96, 2, 64)
+    for window in (None, 32):
+        a = ops.flash_attention(q, k, v, causal=True, window=window,
+                                block_q=32, block_k=32)
+        bopt = blocked_attention(q, k, v, causal=True, window=window,
+                                 block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bopt),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 5000), inv_s=st.sampled_from([0.5, 0.25, 1 / 3.0]),
+       seed=st.integers(0, 100))
+def test_group_average_combine_property(n, inv_s, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    r = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    out = ops.group_average_combine(w, r, inv_s)
+    want = ref.group_average_ref(w, r, inv_s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((3, 5), jnp.float32), ((33, 257), jnp.bfloat16), ((1,), jnp.float32),
+    ((2, 3, 4, 5), jnp.float32)])
+def test_group_average_combine_shapes(shape, dtype):
+    w = randn(*shape, dtype=dtype)
+    r = randn(*shape, dtype=dtype)
+    out = ops.group_average_combine(w, r, 0.5)
+    want = ref.group_average_ref(w, r, 0.5)
+    assert out.shape == shape and out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2)
+
+
+RGLRU_CASES = [
+    (3, 200, 96, True), (1, 17, 130, False), (8, 128, 128, True),
+    (2, 300, 64, False),
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_scan_allclose(case):
+    b, s, w, with_h0 = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (b, s, w)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, w)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, w)), jnp.float32) if with_h0 else None
+    out = ops.rglru_scan(a, x, h0)
+    want = ref.rglru_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_kernel_matches_model_associative_scan():
+    from repro.models.rglru import rglru_scan as assoc
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (2, 64, 32)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 64, 32)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((2, 32)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.rglru_scan(a, x, h0)),
+                               np.asarray(assoc(a, x, h0)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_sequential_reference_stability():
+    """mLSTM oracle stays finite under extreme gate pre-activations."""
+    b, s, h, dh = 1, 32, 2, 16
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    i_pre = jnp.asarray(rng.uniform(-30, 30, (b, s, h)), jnp.float32)
+    f_pre = jnp.asarray(rng.uniform(-30, 30, (b, s, h)), jnp.float32)
+    out = ref.mlstm_chunk_ref(q, k, v, i_pre, f_pre)
+    assert np.isfinite(np.asarray(out)).all()
