@@ -1,0 +1,130 @@
+"""Microbenchmark: per-leaf vs bucketed vs bucketed+Pallas group averaging.
+
+Measures the tentpole claim of the bucketed averaging subsystem on an 8-way
+forced-host-device CPU mesh:
+
+* **ppermute launches** per averaging step (traced from the jaxpr) drop from
+  ``n_leaves * log2(S)`` to ``n_buckets * log2(S)``;
+* wall time per step for the three realisations of the same math:
+  per-leaf reference, bucketed + jnp combine, bucketed + fused Pallas
+  combine (interpret mode off-TPU, so CPU timings measure the bucketing
+  launch saving, not the kernel — run on a TPU backend for the HBM-floor
+  combine numbers);
+* the alpha-beta model's prediction for the same launch counts at cluster
+  scale (LINK_BW/LATENCY from benchmarks/cluster_sim.py).
+
+Usage:  python benchmarks/bench_group_average.py [--layers 24] [--d 512]
+"""
+
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import bucketing, grouping
+from repro.core import group_allreduce as ga
+from repro.launch.hlo_analysis import count_ppermutes
+
+
+def transformer_like_tree(rng, n_dp: int, layers: int, d: int):
+    """A params pytree with realistic leaf-count structure (per dp replica)."""
+    tree = {"emb": jnp.asarray(rng.normal(size=(n_dp, 4 * d, d)) * 0.02,
+                               jnp.float32)}
+    for i in range(layers):
+        tree[f"blk{i}"] = {
+            "wq": jnp.asarray(rng.normal(size=(n_dp, d, d)), jnp.float32),
+            "wk": jnp.asarray(rng.normal(size=(n_dp, d, d)), jnp.float32),
+            "wv": jnp.asarray(rng.normal(size=(n_dp, d, d)), jnp.float32),
+            "wo": jnp.asarray(rng.normal(size=(n_dp, d, d)), jnp.float32),
+            "w1": jnp.asarray(rng.normal(size=(n_dp, d, 4 * d)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(size=(n_dp, 4 * d, d)), jnp.float32),
+            "ln1": jnp.asarray(rng.normal(size=(n_dp, d)), jnp.float32),
+            "ln2": jnp.asarray(rng.normal(size=(n_dp, d)), jnp.float32),
+        }
+    return tree
+
+
+def bench(fn, tree, iters: int) -> float:
+    out = jax.block_until_ready(fn(tree))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(tree))
+    del out
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--S", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--bucket-mb", type=int, default=32)
+    args = ap.parse_args()
+
+    n_dp, S = 8, args.S
+    mesh = jax.make_mesh((n_dp,), ("data",))
+    names, sizes = ga.dp_axis_layout(("data",), {"data": n_dp}, ("data",))
+    rng = np.random.default_rng(0)
+    tree = transformer_like_tree(rng, n_dp, args.layers, args.d)
+
+    local = jax.tree.map(lambda a: a[:1], tree)
+    n_leaves = len(jax.tree.leaves(tree))
+    bucket_bytes = args.bucket_mb * 1024 * 1024
+    layout = bucketing.layout_for(local, max_bucket_bytes=bucket_bytes)
+    stages = grouping.ilog2(S)
+    payload = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree.leaves(local))
+
+    variants = {
+        "per_leaf": dict(fused=False),
+        "bucketed_jnp": dict(fused=True, use_pallas=False),
+        "bucketed_pallas": dict(fused=True, use_pallas=True),
+    }
+    print(f"tree: {n_leaves} leaves, {payload / 1e6:.1f} MB/replica; "
+          f"S={S} ({stages} butterfly stages); "
+          f"layout: {layout.n_buckets} buckets {layout.describe()}")
+
+    results = {}
+    for name, kw in variants.items():
+        f = jax.jit(compat.shard_map(
+            lambda tr, kw=kw: ga.group_average(
+                tr, offset=0, P=n_dp, S=S, axis_names=names, axis_sizes=sizes,
+                average_dtype=jnp.float32, bucket_bytes=bucket_bytes, **kw),
+            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+            axis_names={"data"}))
+        n_pp = count_ppermutes(jax.make_jaxpr(f)(tree).jaxpr)
+        dt = bench(f, tree, args.iters)
+        results[name] = (n_pp, dt)
+        print(f"{name:16s} ppermutes/step {n_pp:5d}   wall {dt * 1e3:8.2f} ms")
+
+    n_pp_leaf = results["per_leaf"][0]
+    n_pp_fused = results["bucketed_pallas"][0]
+    assert n_pp_leaf == n_leaves * stages
+    assert n_pp_fused == layout.n_buckets * stages
+    print(f"ppermute launches: {n_leaves} x log2(S) -> "
+          f"{layout.n_buckets} x log2(S)  "
+          f"({n_pp_leaf} -> {n_pp_fused}, {n_pp_leaf / n_pp_fused:.1f}x fewer)")
+
+    # alpha-beta prediction at cluster scale (same launch counts)
+    from cluster_sim import comm_time
+    t_leaf = comm_time(payload, 64, S, "wagma", n_buckets=n_leaves)
+    t_fused = comm_time(payload, 64, S, "wagma", n_buckets=layout.n_buckets)
+    print(f"alpha-beta model @ P=64: per-leaf {t_leaf * 1e3:.2f} ms/step, "
+          f"bucketed {t_fused * 1e3:.2f} ms/step "
+          f"({t_leaf / t_fused:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,9 +19,13 @@ decides who waits for whom:
                              group advances at the group-median pace;
                              tau-periodic global barrier
 
-Communication cost per step is added from the collective model
-(core/group_allreduce.collective_bytes_per_device) at the paper's network
-bandwidth scale. Output: steps/hour vs P per algorithm.
+Communication cost per step is added from the alpha-beta collective model
+(core/group_allreduce.collective_bytes_per_device + per-launch latency) at
+the paper's network bandwidth scale: every serial stage launches
+``n_buckets`` collectives (one per flat bucket on the fused path, one per
+pytree leaf on the unfused path), each paying LATENCY; payload bytes ride
+LINK_BW.  ``bucketing_win`` sweeps the launch count to show why the
+bucketed averager matters at scale.  Output: steps/hour vs P per algorithm.
 """
 
 from __future__ import annotations
@@ -30,11 +34,13 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.group_allreduce import collective_bytes_per_device
+from repro.core.group_allreduce import (alpha_beta_time,
+                                        collective_bytes_per_device,
+                                        DEFAULT_ALPHA, DEFAULT_BETA)
 from repro.core import grouping
 
-LINK_BW = 10e9          # bytes/s effective per-node (Piz Daint-scale Aries)
-LATENCY = 20e-6         # per collective stage
+LINK_BW = 1.0 / DEFAULT_BETA   # bytes/s per node (Piz Daint-scale Aries)
+LATENCY = DEFAULT_ALPHA        # per collective launch
 
 
 def compute_time_samples(rng, P, steps, workload: str):
@@ -51,17 +57,27 @@ def compute_time_samples(rng, P, steps, workload: str):
     raise ValueError(workload)
 
 
-def comm_time(n_bytes: float, P: int, S: int, algo: str) -> float:
+def comm_time(n_bytes: float, P: int, S: int, algo: str, *,
+              n_buckets: int = 1) -> float:
+    """Alpha-beta collective time: stages x n_buckets x alpha + bytes x beta.
+
+    ``n_buckets`` is the launch count per serial stage: 1-few for the
+    bucketed fused averager, the pytree leaf count (hundreds) for the
+    per-leaf path.
+    """
     wire = collective_bytes_per_device(n_bytes, P, max(S, 2), {
         "wagma": "wagma", "allreduce": "ring_allreduce",
         "local_sgd": "ring_allreduce", "dpsgd": "gossip", "sgp": "gossip",
         "adpsgd": "gossip", "eager": "ring_allreduce",
     }[algo])
+    # true per-topology stage counts (sgp/adpsgd exchange with ONE peer per
+    # step, unlike the symmetric 2-stage gossip of collective_stages)
     stages = {"wagma": grouping.ilog2(max(S, 2)),
               "allreduce": 2 * (P - 1), "local_sgd": 2 * (P - 1),
               "dpsgd": 2, "sgp": 1, "adpsgd": 1,
               "eager": 2 * (P - 1)}[algo]
-    return wire / LINK_BW + stages * LATENCY
+    return alpha_beta_time(wire, stages, n_buckets=n_buckets,
+                           alpha=LATENCY, beta=1.0 / LINK_BW)
 
 
 @dataclass
@@ -73,13 +89,14 @@ class SimResult:
 
 
 def simulate(algo: str, P: int, *, model_bytes: float, workload: str,
-             steps: int = 200, S=None, tau: int = 10, seed: int = 0
-             ) -> SimResult:
+             steps: int = 200, S=None, tau: int = 10, seed: int = 0,
+             n_buckets: int = 1) -> SimResult:
     rng = np.random.default_rng(seed)
     S = S or grouping.default_group_size(P)
     comp = compute_time_samples(rng, P, steps, workload)
-    tcomm_group = comm_time(model_bytes, P, S, algo)
-    tcomm_global = comm_time(model_bytes, P, S, "allreduce")
+    tcomm_group = comm_time(model_bytes, P, S, algo, n_buckets=n_buckets)
+    tcomm_global = comm_time(model_bytes, P, S, "allreduce",
+                             n_buckets=n_buckets)
 
     clock = np.zeros(P)             # per-worker local time
     waited = 0.0
@@ -129,3 +146,21 @@ def simulate(algo: str, P: int, *, model_bytes: float, workload: str,
     total = clock.max()
     return SimResult(algo, P, steps / total * 3600.0,
                      waited / (P * total))
+
+
+def bucketing_win(P: int = 64, *, model_bytes: float = 50e6,
+                  workload: str = "wmt", n_leaves: int = 300,
+                  n_buckets: int = 4, steps: int = 200) -> dict:
+    """Steps/hour with per-leaf vs bucketed collective launches.
+
+    Models the averaging refactor at cluster scale: identical payload bytes,
+    but the per-leaf schedule pays ``n_leaves`` collective latencies per
+    butterfly stage where the bucketed path pays ``n_buckets``.
+    """
+    leaf = simulate("wagma", P, model_bytes=model_bytes, workload=workload,
+                    steps=steps, n_buckets=n_leaves)
+    bucketed = simulate("wagma", P, model_bytes=model_bytes,
+                        workload=workload, steps=steps, n_buckets=n_buckets)
+    return {"per_leaf_steps_per_hour": leaf.steps_per_hour,
+            "bucketed_steps_per_hour": bucketed.steps_per_hour,
+            "speedup": bucketed.steps_per_hour / leaf.steps_per_hour}

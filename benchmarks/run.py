@@ -74,6 +74,7 @@ import sys, time
 sys.path.insert(0, %r)
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core.wagma import WagmaAverager, WagmaConfig
 from repro.core.group_allreduce import dp_axis_layout
 
@@ -82,9 +83,9 @@ names, sizes = dp_axis_layout(("data",), {"data": 8}, ("data",))
 av = WagmaAverager(names, sizes, WagmaConfig(group_size=2))
 N = 25_559_081 // 8  # ResNet-50 params, model-sharded 8-way
 x = {"w": jnp.zeros((8, N), jnp.float32)}
-group = jax.jit(jax.shard_map(lambda t: av.comm(t, 0), mesh=mesh,
+group = jax.jit(compat.shard_map(lambda t: av.comm(t, 0), mesh=mesh,
                 in_specs=P("data"), out_specs=P("data"), axis_names={"data"}))
-glob = jax.jit(jax.shard_map(av.sync, mesh=mesh,
+glob = jax.jit(compat.shard_map(av.sync, mesh=mesh,
                in_specs=P("data"), out_specs=P("data"), axis_names={"data"}))
 for f in (group, glob):
     f(x)["w"].block_until_ready()

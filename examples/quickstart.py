@@ -11,12 +11,17 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 
+from repro import compat
 from repro.configs import get_config
 from repro.launch.train import Trainer
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    # dp x tp needs lax.scan over auto-sharded xs inside a partially-manual
+    # shard_map, which crashes the XLA bundled with JAX 0.4.x — fall back to
+    # pure data parallelism there (see compat.PARTIAL_AUTO_SCAN_OK).
+    n_model = 2 if compat.PARTIAL_AUTO_SCAN_OK else 1
+    mesh = jax.make_mesh((4, n_model), ("data", "model"))
     cfg = get_config("tinyllama-1.1b", smoke=True)
 
     print("== WAGMA-SGD (S=2, tau=5) ==")

@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.registry import build_model
 from repro.serve import build_serve_step
+from repro import compat
 
 
 def main():
@@ -30,7 +31,7 @@ def main():
     cfg = get_config(args.arch, smoke=True)
     model = build_model(cfg)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
         prompt = jnp.asarray(

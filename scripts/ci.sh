@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the whole suite, one command, locally and in CI.
+#
+#   scripts/ci.sh            # full tier-1 run (fails fast, quiet)
+#   scripts/ci.sh -k fused   # extra pytest args pass through
+#
+# The main pytest process stays on the real single-device CPU view — the
+# distributed/differential tests (tests/test_distributed.py,
+# tests/test_group_average_fused.py) each spawn subprocesses with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8, so the 8-device
+# host-platform CPU mesh is exercised without ever forcing the flag
+# globally (it must not leak into unrelated compilation caches).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Belt and braces: never inherit a stray device-forcing flag or GPU pick-up.
+unset XLA_FLAGS
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -1,11 +1,20 @@
 """The paper's primary contribution: wait-avoiding group model averaging.
 
 * grouping.py        — Algorithm 1 (dynamic butterfly grouping), pure/static
+* bucketing.py       — flat-buffer bucketing: pack the params pytree into a
+                       few dtype-homogeneous 1-D buckets (cached layout) so
+                       every averager launches one collective per *bucket*
+                       per stage instead of one per leaf (DESIGN.md §7)
 * group_allreduce.py — butterfly group allreduce via shard_map+ppermute,
-                       stacked simulator, collective cost model
+                       bucketed fused path (Pallas combine) + per-leaf
+                       reference path, stacked simulator, alpha-beta
+                       collective cost model
 * wagma.py           — Algorithm 2 (WAGMA-SGD) as a composable averager
-* baselines.py       — the paper's comparison set (Table I)
+* baselines.py       — the paper's comparison set (Table I), same bucketing
 * staleness.py       — wait-avoidance/straggler semantics simulator
+
+Group patterns are static per compiled step: the host loop dispatches one of
+``n_phases`` jitted variants by ``phase_for_step(t)`` (train/train_step.py).
 """
 
 from repro.core.grouping import (default_group_size, groups_for_iteration,

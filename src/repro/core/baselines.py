@@ -10,6 +10,13 @@ Every averager exposes the same interface as ``WagmaAverager``:
     comm(tree, phase)     — per-step collective (inside shard_map, manual dp)
     sync(tree)            — global average (inside shard_map)
 
+Every collective runs on the bucketed flat-buffer path by default
+(``fused=True`` constructor kwarg; DESIGN.md §7): the tree is packed into a
+few dtype-homogeneous buckets (core/bucketing.py) so each gossip/psum mix
+launches one collective per bucket instead of one per leaf, with fp32
+accumulation per bucket.  ``fused=False`` restores the per-leaf reference
+path; the differential suite pins the two to agree.
+
 Distributed semantics on a lock-step SPMD pod:
 
 * Allreduce-SGD — synchronous global gradient pmean (standard data-parallel).
@@ -40,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import grouping
+from repro.core import bucketing, grouping
 from repro.core.group_allreduce import (butterfly_exchange, global_average)
 
 
@@ -48,10 +55,14 @@ class _AveragerBase:
     grad_comm = False
     n_phases = 1
 
-    def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int]):
+    def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int],
+                 fused: bool = True,
+                 bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES):
         self.axis_names = tuple(dp_axis_names)
         self.axis_sizes = tuple(dp_axis_sizes)
         self.P = int(np.prod(dp_axis_sizes))
+        self.fused = fused
+        self.bucket_bytes = bucket_bytes
 
     def phase_for_step(self, t: int) -> int:
         return t % self.n_phases
@@ -63,7 +74,23 @@ class _AveragerBase:
         return tree
 
     def sync(self, tree):
-        return global_average(tree, self.axis_names)
+        return global_average(tree, self.axis_names, fused=self.fused,
+                              bucket_bytes=self.bucket_bytes)
+
+    def _mix_tree(self, tree, mix):
+        """Apply a flat fp32 gossip mix per bucket (fused) or per leaf.
+
+        ``mix`` maps an fp32 buffer to an fp32 buffer of the same shape and
+        must be shape-polymorphic (ppermute/psum are), so the exact same
+        closure serves both granularities — the differential tests exploit
+        that to pin fused == per-leaf.
+        """
+        if self.fused:
+            return bucketing.tree_map_bucketed(
+                mix, tree, compute_dtype=jnp.float32,
+                max_bucket_bytes=self.bucket_bytes)
+        return jax.tree.map(
+            lambda w: mix(w.astype(jnp.float32)).astype(w.dtype), tree)
 
 
 class AllreduceAverager(_AveragerBase):
@@ -72,18 +99,19 @@ class AllreduceAverager(_AveragerBase):
     grad_comm = True
 
     def comm(self, tree, phase: int):
-        # fp32 accumulation (also: XLA-CPU crashes on bf16 manual all-reduce)
-        return jax.tree.map(
-            lambda g: jax.lax.pmean(g.astype(jnp.float32),
-                                    self.axis_names).astype(g.dtype), tree)
+        # fp32 accumulation (also: XLA-CPU crashes on bf16 manual all-reduce);
+        # bucketed: one pmean per bucket — the MG-WFBP merged-gradient layout
+        return self._mix_tree(
+            tree, lambda g: jax.lax.pmean(g, self.axis_names))
 
 
 class LocalSGDAverager(_AveragerBase):
     """Local SGD: H local steps, then a global model average."""
     name = "local_sgd"
 
-    def __init__(self, dp_axis_names, dp_axis_sizes, sync_period: int = 1):
-        super().__init__(dp_axis_names, dp_axis_sizes)
+    def __init__(self, dp_axis_names, dp_axis_sizes, sync_period: int = 1,
+                 **kw):
+        super().__init__(dp_axis_names, dp_axis_sizes, **kw)
         self.sync_period = sync_period
 
     def sync_due(self, t: int) -> bool:
@@ -104,53 +132,51 @@ class DPSGDAverager(_AveragerBase):
         fwd = [(i, (i + 1) % n) for i in range(n)]
         bwd = [(i, (i - 1) % n) for i in range(n)]
 
-        def mix(w):
-            acc = w.astype(jnp.float32)
+        def mix(acc):
             left = jax.lax.ppermute(acc, self.axis_names[0], fwd)
             right = jax.lax.ppermute(acc, self.axis_names[0], bwd)
-            return ((acc + left + right) / 3.0).astype(w.dtype)
+            return (acc + left + right) / 3.0
 
-        return jax.tree.map(mix, tree)
+        return self._mix_tree(tree, mix)
 
 
 class SGPAverager(_AveragerBase):
     """Stochastic Gradient Push — hypercube-edge variant (one peer/step)."""
     name = "sgp"
 
-    def __init__(self, dp_axis_names, dp_axis_sizes, neighbours: int = 1):
-        super().__init__(dp_axis_names, dp_axis_sizes)
+    def __init__(self, dp_axis_names, dp_axis_sizes, neighbours: int = 1,
+                 **kw):
+        super().__init__(dp_axis_names, dp_axis_sizes, **kw)
         self.neighbours = neighbours
         self.n_phases = grouping.ilog2(self.P)
 
     def comm(self, tree, phase: int):
-        def mix(w):
-            acc = w.astype(jnp.float32)
+        def mix(acc):
             total = acc
             for k in range(self.neighbours):
                 bit = (phase + k) % grouping.ilog2(self.P)
                 total = total + butterfly_exchange(acc, bit, self.axis_names,
                                                    self.axis_sizes)
-            return (total / (self.neighbours + 1.0)).astype(w.dtype)
+            return total / (self.neighbours + 1.0)
 
-        return jax.tree.map(mix, tree)
+        return self._mix_tree(tree, mix)
 
 
 class ADPSGDAverager(_AveragerBase):
     """AD-PSGD: pairwise model averaging (async only in the simulator)."""
     name = "adpsgd"
 
-    def __init__(self, dp_axis_names, dp_axis_sizes):
-        super().__init__(dp_axis_names, dp_axis_sizes)
+    def __init__(self, dp_axis_names, dp_axis_sizes, **kw):
+        super().__init__(dp_axis_names, dp_axis_sizes, **kw)
         self.n_phases = grouping.ilog2(self.P)
 
     def comm(self, tree, phase: int):
-        def mix(w):
-            acc = w.astype(jnp.float32)
+        def mix(acc):
             other = butterfly_exchange(acc, phase, self.axis_names,
                                        self.axis_sizes)
-            return ((acc + other) / 2.0).astype(w.dtype)
+            return (acc + other) / 2.0
 
-        return jax.tree.map(mix, tree)
+        return self._mix_tree(tree, mix)
 
 
 class EagerSGDAverager(AllreduceAverager):

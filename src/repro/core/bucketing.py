@@ -1,0 +1,194 @@
+"""Flat-buffer bucketing for collective communication (MG-WFBP-style).
+
+The averaging hot path used to issue one ``ppermute`` + unfused add/scale per
+pytree *leaf* per butterfly stage — hundreds of sub-megabyte collectives per
+step on a transformer, each paying full launch latency (the alpha term of the
+alpha-beta cost model; see ``group_allreduce.collective_time``).  This module
+packs a params pytree into a handful of contiguous, dtype-homogeneous 1-D
+**buckets** so every stage does one collective per bucket, and the combine
+arithmetic can stream through the fused Pallas kernel
+(``kernels/group_average.py``) one HBM read per operand.
+
+The pack/unpack layout is a pure function of the tree *structure*
+(treedef + leaf shapes/dtypes + bucket budget) and is cached, so repeated
+calls inside a compiled step trace reuse the same slicing plan:
+
+    layout  = layout_for(tree)              # cached BucketLayout
+    buckets = pack(tree, layout)            # tuple of 1-D arrays
+    ...one collective per bucket...
+    tree    = unpack(buckets, layout)       # exact round trip
+
+Layout rules:
+
+* leaves are grouped by dtype (a bucket is dtype-homogeneous so the packed
+  buffer never casts), filled greedily in canonical tree order;
+* a bucket closes when adding the next leaf would push it past
+  ``max_bucket_bytes`` (an oversize leaf still gets its own bucket — leaves
+  are never split across buckets, which keeps unpack a static slice);
+* each bucket is zero-padded to a whole number of 128-element lanes so the
+  Pallas combine kernel never re-pads per stage (zeros are a fixed point of
+  ``(w + recv) * 1/S`` under XOR-symmetric exchanges, so the pad region
+  stays zero through every butterfly stage);
+* zero-size leaves occupy zero-length slices — they survive the round trip
+  without ever touching a collective.
+
+``tree_map_bucketed`` is the generic driver used by every averager (WAGMA
+butterfly, global psum, gossip baselines): apply a flat-buffer mixing
+function once per bucket instead of once per leaf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default bucket budget.  32 MiB balances the alpha term (fewer, larger
+# collectives) against pipelining granularity: the follow-on async overlap
+# work (ROADMAP) issues bucket k+1's ppermute while combining bucket k, which
+# needs at least a few buckets per model to hide anything.
+DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
+
+# TPU lane width; buckets are padded to a multiple of this so flat buffers
+# tile cleanly (f32 min tile is (8, 128) — see the Pallas guide).
+_LANES = 128
+
+
+@dataclass(frozen=True)
+class _LeafSlot:
+    bucket: int            # which bucket this leaf lives in
+    offset: int            # element offset of the leaf inside the bucket
+    size: int              # element count (0 for empty leaves)
+    shape: Tuple[int, ...]
+    dtype: np.dtype
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Cached pack/unpack plan for one tree structure."""
+    treedef: jax.tree_util.PyTreeDef
+    slots: Tuple[_LeafSlot, ...]          # one per leaf, canonical order
+    bucket_sizes: Tuple[int, ...]         # padded element counts
+    bucket_dtypes: Tuple[np.dtype, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    def describe(self) -> str:
+        return " ".join(
+            f"[{i}:{np.dtype(d).name}x{s}]"
+            for i, (s, d) in enumerate(zip(self.bucket_sizes,
+                                           self.bucket_dtypes)))
+
+
+def _pad_to_lanes(n: int) -> int:
+    return -(-n // _LANES) * _LANES if n else 0
+
+
+def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                 ) -> BucketLayout:
+    """Plan buckets for ``tree`` (arrays or ShapeDtypeStructs)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    metas = [(int(np.prod(l.shape, dtype=np.int64)), tuple(l.shape),
+              np.dtype(l.dtype)) for l in leaves]
+
+    # dtype groups in first-appearance order, greedy fill in leaf order
+    slot_of_leaf: Dict[int, _LeafSlot] = {}
+    bucket_sizes: list = []
+    bucket_dtypes: list = []
+    open_bucket: Dict[np.dtype, int] = {}     # dtype -> open bucket index
+    for li, (size, shape, dtype) in enumerate(metas):
+        bi = open_bucket.get(dtype)
+        if bi is not None:
+            would_be = (bucket_sizes[bi] + size) * dtype.itemsize
+            if bucket_sizes[bi] > 0 and size > 0 and would_be > max_bucket_bytes:
+                bi = None                      # close it, open a fresh one
+        if bi is None:
+            bi = len(bucket_sizes)
+            bucket_sizes.append(0)
+            bucket_dtypes.append(dtype)
+            open_bucket[dtype] = bi
+        slot_of_leaf[li] = _LeafSlot(bi, bucket_sizes[bi], size, shape, dtype)
+        bucket_sizes[bi] += size
+
+    bucket_sizes = [_pad_to_lanes(s) for s in bucket_sizes]
+    return BucketLayout(treedef, tuple(slot_of_leaf[i] for i in range(len(metas))),
+                        tuple(bucket_sizes), tuple(bucket_dtypes))
+
+
+_LAYOUT_CACHE: Dict[tuple, BucketLayout] = {}
+
+
+def layout_for(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
+               ) -> BucketLayout:
+    """Cached :func:`build_layout` keyed on structure, not array identity."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, tuple((tuple(l.shape), np.dtype(l.dtype).str)
+                          for l in leaves), max_bucket_bytes)
+    layout = _LAYOUT_CACHE.get(key)
+    if layout is None:
+        layout = _LAYOUT_CACHE[key] = build_layout(
+            tree, max_bucket_bytes=max_bucket_bytes)
+    return layout
+
+
+def pack(tree, layout: BucketLayout) -> Tuple[jax.Array, ...]:
+    """Concatenate the tree's leaves into the layout's flat buckets."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts: list = [[] for _ in range(layout.n_buckets)]
+    filled: list = [0] * layout.n_buckets
+    for leaf, slot in zip(leaves, layout.slots):
+        if slot.size:
+            parts[slot.bucket].append(jnp.ravel(leaf))
+            filled[slot.bucket] += slot.size
+    out = []
+    for bi, (chunks, size, dtype) in enumerate(
+            zip(parts, layout.bucket_sizes, layout.bucket_dtypes)):
+        pad = size - filled[bi]
+        if pad:
+            chunks.append(jnp.zeros((pad,), dtype))
+        if not chunks:
+            out.append(jnp.zeros((0,), dtype))
+        elif len(chunks) == 1:
+            out.append(chunks[0])
+        else:
+            out.append(jnp.concatenate(chunks))
+    return tuple(out)
+
+
+def unpack(buckets: Sequence[jax.Array], layout: BucketLayout):
+    """Exact inverse of :func:`pack` (slices are static)."""
+    leaves = []
+    for slot in layout.slots:
+        buf = buckets[slot.bucket]
+        flat = jax.lax.slice(buf, (slot.offset,), (slot.offset + slot.size,)) \
+            if slot.size else jnp.zeros((0,), slot.dtype)
+        leaves.append(flat.reshape(slot.shape).astype(slot.dtype))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def tree_map_bucketed(fn: Callable[[jax.Array], jax.Array], tree, *,
+                      compute_dtype=jnp.float32,
+                      max_bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Apply a flat-buffer mixing function once per bucket of ``tree``.
+
+    ``fn`` maps a 1-D buffer to a same-shaped 1-D buffer (e.g. a butterfly
+    exchange-and-combine, a pmean, a gossip mix).  Buffers are presented in
+    ``compute_dtype`` (``None`` = the bucket's storage dtype) and results
+    cast back, so bf16 models average with fp32 accumulation while touching
+    each leaf exactly once for pack and once for unpack.
+    """
+    layout = layout_for(tree, max_bucket_bytes=max_bucket_bytes)
+    out = []
+    for buf in pack(tree, layout):
+        if buf.size == 0:
+            out.append(buf)
+            continue
+        orig = buf.dtype
+        acc = buf.astype(compute_dtype) if compute_dtype is not None else buf
+        out.append(fn(acc).astype(orig))
+    return unpack(tuple(out), layout)

@@ -3,9 +3,9 @@
 The paper implements group allreduce as activation messages + a butterfly
 (recursive-doubling) exchange inside each group, on MPI.  Under XLA the same
 exchange is ``log2(S)`` stages of ``jax.lax.ppermute`` with XOR-partner
-permutations, executed inside a ``jax.shard_map`` that is *manual* over the
-data-parallel mesh axes and *auto* (GSPMD) over the model axis.  Each stage
-combines the local shard with the partner's:
+permutations, executed inside a ``shard_map`` (via ``repro.compat``) that is
+*manual* over the data-parallel mesh axes and *auto* (GSPMD) over the model
+axis.  Each stage combines the local shard with the partner's:
 
     for bit in mask_bits(P, S, t):  w = (w + ppermute(w, bit)) ;  w /= S
 
@@ -13,13 +13,25 @@ The XOR bit decides which mesh axis carries the exchange: low bits permute
 within the ``data`` axis (intra-pod ICI), high bits within the ``pod`` axis
 (inter-pod links) — the topology-awareness the paper gets from its butterfly.
 
+**Bucketed fused path (default).**  ``group_average(fused=True)`` packs the
+pytree into a few contiguous dtype-homogeneous flat buckets
+(``core/bucketing.py``) so each butterfly stage issues **one ppermute per
+bucket** instead of one per leaf — collective launch count drops from
+``n_leaves * log2(S)`` to ``n_buckets * log2(S)`` (the alpha term of
+:func:`collective_time`) — and the combine ``(w + recv) * 1/S`` runs through
+the fused Pallas kernel (``kernels/group_average.py``: fp32 accumulation,
+one HBM read per operand) instead of two unfused elementwise passes.
+``fused=False`` keeps the per-leaf reference path; the two are differentially
+tested against each other and the stacked simulator on every phase offset.
+
 Because XLA permutations are static, functions here take a *static* phase
 offset; the training loop cycles through ``grouping.distinct_offsets`` and
 dispatches the matching compiled step (see train/train_step.py).
 
 Two more entry points ship alongside:
 
-* ``global_average``        — the tau-periodic synchronous allreduce (psum).
+* ``global_average``        — the tau-periodic synchronous allreduce (psum),
+  bucketed the same way when ``fused=True``.
 * ``group_average_stacked`` — single-process simulator on stacked (P, ...)
   pytrees via the doubly-stochastic averaging matrix; shares the group math
   with the distributed path and is used by tests and convergence benchmarks.
@@ -27,13 +39,13 @@ Two more entry points ship alongside:
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import grouping
+from repro.core import bucketing, grouping
 
 
 # ---------------------------------------------------------------------------
@@ -66,37 +78,79 @@ def butterfly_exchange(x: jax.Array, bit: int, axis_names: Sequence[str],
     return jax.lax.ppermute(x, axis_names[ax], perm)
 
 
+def _stage_combine(acc, recv, scale: float, use_pallas: bool):
+    """(acc + recv) * scale — fused Pallas kernel or plain jnp."""
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.group_average_combine(acc, recv, scale)
+    return (acc + recv) * jnp.asarray(scale, acc.dtype)
+
+
 def group_average(tree, *, offset: int, P: int, S: int,
                   axis_names: Sequence[str], axis_sizes: Sequence[int],
-                  average_dtype=None):
+                  average_dtype=None, fused: bool = True,
+                  bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                  use_pallas: Optional[bool] = None):
     """Group model averaging over groups of size S (paper Alg. 2 line 9+11).
 
     Must be called inside shard_map manual over ``axis_names``. Applies
     log2(S) ppermute+add stages and divides by S; every worker ends with the
     mean of the S models in its (dynamically selected) group.
+
+    ``fused=True`` (default) runs the bucketed flat-buffer path: one ppermute
+    per bucket per stage, combine through the fused Pallas kernel (fp32
+    accumulation; ``use_pallas=False`` forces the jnp combine, ``None`` means
+    "pallas when fused").  ``fused=False`` is the per-leaf reference path.
+    Both orders the per-element arithmetic identically — log2(S) adds then
+    one scale — so they agree to fp32-accumulation tolerance (bit-exact for
+    fp32 accumulation dtypes).
     """
     bits = grouping.mask_bits_for_offset(P, S, offset)
     inv_s = 1.0 / S
 
-    def avg_leaf(w):
-        orig_dtype = w.dtype
-        acc = w.astype(average_dtype) if average_dtype is not None else w
-        for bit in bits:
-            acc = acc + butterfly_exchange(acc, bit, axis_names, axis_sizes)
-        acc = acc * jnp.asarray(inv_s, acc.dtype)
-        return acc.astype(orig_dtype)
+    if not fused:
+        def avg_leaf(w):
+            orig_dtype = w.dtype
+            acc = w.astype(average_dtype) if average_dtype is not None else w
+            for bit in bits:
+                acc = acc + butterfly_exchange(acc, bit, axis_names, axis_sizes)
+            acc = acc * jnp.asarray(inv_s, acc.dtype)
+            return acc.astype(orig_dtype)
 
-    return jax.tree.map(avg_leaf, tree)
+        return jax.tree.map(avg_leaf, tree)
+
+    pallas = True if use_pallas is None else use_pallas
+
+    def mix(acc):
+        for i, bit in enumerate(bits):
+            recv = butterfly_exchange(acc, bit, axis_names, axis_sizes)
+            scale = inv_s if i == len(bits) - 1 else 1.0
+            acc = _stage_combine(acc, recv, scale, pallas)
+        return acc
+
+    return bucketing.tree_map_bucketed(mix, tree,
+                                       compute_dtype=average_dtype,
+                                       max_bucket_bytes=bucket_bytes)
 
 
-def global_average(tree, axis_names: Sequence[str]):
-    """tau-periodic synchronous allreduce mean over all dp replicas (line 16)."""
+def global_average(tree, axis_names: Sequence[str], *, fused: bool = True,
+                   bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES):
+    """tau-periodic synchronous allreduce mean over all dp replicas (line 16).
+
+    ``fused=True`` buckets the tree first: one pmean per bucket instead of
+    one per leaf (same payload bytes, log2(P)x fewer collective launches).
+    """
     names = tuple(axis_names)
 
-    def avg_leaf(w):
-        return jax.lax.pmean(w.astype(jnp.float32), names).astype(w.dtype)
+    if not fused:
+        def avg_leaf(w):
+            return jax.lax.pmean(w.astype(jnp.float32), names).astype(w.dtype)
 
-    return jax.tree.map(avg_leaf, tree)
+        return jax.tree.map(avg_leaf, tree)
+
+    return bucketing.tree_map_bucketed(
+        lambda buf: jax.lax.pmean(buf, names), tree,
+        compute_dtype=jnp.float32, max_bucket_bytes=bucket_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -151,3 +205,64 @@ def collective_bytes_per_device(n_bytes: int, P: int, S: int,
     if algorithm == "gossip":
         return 2.0 * n_bytes
     raise ValueError(algorithm)
+
+
+def collective_stages(P: int, S: int, algorithm: str = "wagma") -> int:
+    """Serial collective rounds per step (the latency-bound term)."""
+    lp, ls = grouping.ilog2(P), grouping.ilog2(max(S, 1))
+    if algorithm == "wagma":
+        return ls
+    if algorithm == "butterfly_global":
+        return lp
+    if algorithm == "ring_allreduce":
+        return 2 * (P - 1)
+    if algorithm == "gossip":
+        return 2
+    raise ValueError(algorithm)
+
+
+# Default network constants (Piz Daint-scale Aries; overridden by callers
+# with measured values). benchmarks/cluster_sim.py reuses these.
+DEFAULT_ALPHA = 20e-6          # seconds per collective launch
+DEFAULT_BETA = 1.0 / 10e9      # seconds per wire byte
+
+
+def alpha_beta_time(wire_bytes: float, stages: int, *, n_buckets: int = 1,
+                    alpha: float = DEFAULT_ALPHA,
+                    beta: float = DEFAULT_BETA) -> float:
+    """The alpha-beta formula: stages * n_buckets * alpha + bytes * beta.
+
+    Every serial stage launches one collective *per bucket* (per leaf on the
+    unfused path — pass ``n_buckets=n_leaves`` to model it), each paying the
+    per-collective latency ``alpha``; payload bytes ride the inverse
+    bandwidth ``beta`` regardless of bucketing.  This is the lever MG-WFBP
+    optimises: bucketing keeps alpha*stages*n_buckets ~constant while
+    per-leaf schedules pay hundreds of alphas per stage.
+    """
+    return stages * max(n_buckets, 1) * alpha + wire_bytes * beta
+
+
+def collective_time(n_bytes: float, P: int, S: int,
+                    algorithm: str = "wagma", *, n_buckets: int = 1,
+                    alpha: float = DEFAULT_ALPHA,
+                    beta: float = DEFAULT_BETA) -> float:
+    """Alpha-beta wall time per step of one algorithm's collective."""
+    wire = collective_bytes_per_device(n_bytes, P, S, algorithm)
+    return alpha_beta_time(wire, collective_stages(P, S, algorithm),
+                           n_buckets=n_buckets, alpha=alpha, beta=beta)
+
+
+def wagma_step_time(n_bytes: float, P: int, S: int, *, tau: int,
+                    n_buckets: int = 1, alpha: float = DEFAULT_ALPHA,
+                    beta: float = DEFAULT_BETA) -> float:
+    """Tau-amortised WAGMA averaging seconds/step: (tau-1) group butterflies
+    + one bandwidth-optimal ring-allreduce global sync, averaged.
+
+    Single source of the amortisation used by ``WagmaAverager`` and
+    ``launch/costmodel.averaging_comm_cost``.
+    """
+    group = collective_time(n_bytes, P, S, "wagma", n_buckets=n_buckets,
+                            alpha=alpha, beta=beta)
+    sync = collective_time(n_bytes, P, S, "ring_allreduce",
+                           n_buckets=n_buckets, alpha=alpha, beta=beta)
+    return ((tau - 1) * group + sync) / tau

@@ -21,7 +21,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import group_allreduce, grouping
+from repro.core import bucketing, group_allreduce, grouping
 
 
 @dataclass(frozen=True)
@@ -30,6 +30,9 @@ class WagmaConfig:
     tau: int = 10                         # global sync period (paper §V-B)
     average_dtype: Optional[str] = "float32"   # accumulation dtype for averaging
     dynamic_groups: bool = True           # False -> fixed groups (paper ablation 2)
+    fused: bool = True                    # bucketed flat-buffer averaging path
+    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+    use_pallas: Optional[bool] = None     # None -> Pallas combine when fused
 
 
 class WagmaAverager:
@@ -75,11 +78,15 @@ class WagmaAverager:
         return group_allreduce.group_average(
             tree, offset=self.offsets[phase], P=self.P, S=self.S,
             axis_names=self.axis_names, axis_sizes=self.axis_sizes,
-            average_dtype=dtype)
+            average_dtype=dtype, fused=self.cfg.fused,
+            bucket_bytes=self.cfg.bucket_bytes,
+            use_pallas=self.cfg.use_pallas)
 
     def sync(self, tree):
         """Synchronous global allreduce (Alg. 2 line 16)."""
-        return group_allreduce.global_average(tree, self.axis_names)
+        return group_allreduce.global_average(
+            tree, self.axis_names, fused=self.cfg.fused,
+            bucket_bytes=self.cfg.bucket_bytes)
 
     # -- analysis ----------------------------------------------------------
     def comm_bytes_per_step(self, payload_bytes: int) -> float:
@@ -91,3 +98,16 @@ class WagmaAverager:
         sync = group_allreduce.collective_bytes_per_device(
             payload_bytes, self.P, self.S, "ring_allreduce")
         return ((tau - 1) * group + sync) / tau
+
+    def comm_time_per_step(self, payload_bytes: int, *, n_buckets: int = 1,
+                           alpha: float = group_allreduce.DEFAULT_ALPHA,
+                           beta: float = group_allreduce.DEFAULT_BETA) -> float:
+        """Average per-device alpha-beta collective seconds/step.
+
+        ``n_buckets`` is the launch count per stage: the bucketed fused path
+        uses the layout's bucket count; pass the leaf count to model the
+        per-leaf path (the bucketing win is this ratio in the alpha term).
+        """
+        return group_allreduce.wagma_step_time(
+            payload_bytes, self.P, self.S, tau=self.cfg.tau,
+            n_buckets=n_buckets, alpha=alpha, beta=beta)

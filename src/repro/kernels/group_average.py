@@ -7,9 +7,13 @@ with the received shard. Done naively this is two HBM-bound elementwise passes
 through VMEM tiles once, accumulating in fp32 and writing the model dtype —
 one read of each operand + one write, the HBM floor.
 
-1-D tiling: weights arrive flattened; the grid walks (n // block) tiles of
-``block`` elements (8*128*128 default = 128 KiB bf16 tiles, well inside the
-~16 MiB VMEM budget with double-buffering).
+Tiling: weights arrive flattened (the bucketed averaging path —
+``core/bucketing.py`` — hands us lane-padded flat buckets); the buffer is
+viewed as (rows, 128) lanes and the grid walks ``block_rows``-row tiles
+(1024 x 128 default = 512 KiB f32 per operand tile, comfortably inside the
+~16 MiB VMEM budget with double buffering; f32 min tile is (8, 128)).
+Sub-lane sizes and non-divisible row counts are zero-padded once here — the
+bucketed caller never triggers that path because its buckets are pre-padded.
 """
 
 from __future__ import annotations
@@ -20,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_LANES = 128
+
 
 def _combine_kernel(w_ref, r_ref, o_ref, *, inv_s: float):
     w = w_ref[...].astype(jnp.float32)
@@ -27,26 +33,32 @@ def _combine_kernel(w_ref, r_ref, o_ref, *, inv_s: float):
     o_ref[...] = ((w + r) * inv_s).astype(o_ref.dtype)
 
 
-def group_average_combine(w, recv, inv_s: float, *, block: int = 8 * 128 * 128,
+def group_average_combine(w, recv, inv_s: float, *, block_rows: int = 1024,
                           interpret: bool = False):
-    """Flat fused (w + recv) * inv_s; w/recv any shape, same dtype."""
+    """Fused (w + recv) * inv_s; w/recv any shape, same dtype."""
     shape, dtype = w.shape, w.dtype
+    n = w.size
+    if n == 0:
+        return w
     flat_w = w.reshape(-1)
     flat_r = recv.reshape(-1)
-    n = flat_w.size
-    block = min(block, n)
-    pad = (-n) % block
+    rows = -(-n // _LANES)
+    block_rows = min(block_rows, rows)
+    rows_padded = -(-rows // block_rows) * block_rows
+    pad = rows_padded * _LANES - n
     if pad:
         flat_w = jnp.pad(flat_w, (0, pad))
         flat_r = jnp.pad(flat_r, (0, pad))
-    grid = (flat_w.size // block,)
+    tw = flat_w.reshape(rows_padded, _LANES)
+    tr = flat_r.reshape(rows_padded, _LANES)
+    grid = (rows_padded // block_rows,)
     out = pl.pallas_call(
         functools.partial(_combine_kernel, inv_s=inv_s),
         grid=grid,
-        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
-                  pl.BlockSpec((block,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((flat_w.size,), dtype),
+        in_specs=[pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_padded, _LANES), dtype),
         interpret=interpret,
-    )(flat_w, flat_r)
-    return out[:n].reshape(shape)
+    )(tw, tr)
+    return out.reshape(-1)[:n].reshape(shape)

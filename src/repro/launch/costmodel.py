@@ -21,6 +21,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, InputShape
+from repro.core import bucketing, group_allreduce
 
 
 @dataclass
@@ -239,6 +240,46 @@ def decode_cost(cfg, shape, *, n_dp: int, n_model: int) -> CostReport:
     model_flops = 2.0 * active * B / (n_dp * n_model)
     return CostReport(flops_device, hbm, model_flops, total, active,
                       {"weight_read": weight_read, "cache_read": cache_read})
+
+
+@dataclass
+class CommReport:
+    """Alpha-beta averaging-communication cost (see group_allreduce)."""
+    payload_bytes: float          # per-device averaged payload per step
+    n_leaves: int
+    n_buckets: int
+    t_per_leaf: float             # seconds/step, one collective per leaf
+    t_bucketed: float             # seconds/step, one collective per bucket
+    speedup: float
+
+
+def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
+                        n_model: int = 1, n_leaves: int, n_buckets: int = None,
+                        dtype_bytes: int = 2,
+                        bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                        alpha: float = group_allreduce.DEFAULT_ALPHA,
+                        beta: float = group_allreduce.DEFAULT_BETA
+                        ) -> CommReport:
+    """Per-step averaging wall time: per-leaf vs bucketed collective launches.
+
+    The beta (bandwidth) term is identical — bucketing moves the same bytes —
+    so the whole win is the alpha term: ``log2(S) * n_launches * alpha``,
+    tau-amortised by ``group_allreduce.wagma_step_time`` (the same formula
+    ``WagmaAverager.comm_time_per_step`` reports).
+    """
+    total, _ = param_count(cfg)
+    payload = total / n_model * dtype_bytes
+    if n_buckets is None:
+        n_buckets = max(1, -(-int(payload) // bucket_bytes))
+
+    def per_step(n_launch: int) -> float:
+        return group_allreduce.wagma_step_time(
+            payload, P, S, tau=tau, n_buckets=n_launch, alpha=alpha,
+            beta=beta)
+
+    t_leaf, t_bucket = per_step(n_leaves), per_step(n_buckets)
+    return CommReport(payload, n_leaves, n_buckets, t_leaf, t_bucket,
+                      t_leaf / t_bucket)
 
 
 def cost_for(cfg, shape, kind: str, *, n_dp: int, n_model: int, **kw):

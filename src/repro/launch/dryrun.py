@@ -33,6 +33,7 @@ from repro.launch import specs as specs_lib
 from repro.launch.hlo_analysis import collective_summary
 from repro.launch.costmodel import cost_for, param_count
 from repro.models.registry import build_model
+from repro import compat
 
 LONG_NATIVE = {"xlstm-350m", "recurrentgemma-2b", "gemma3-12b"}
 LONG_SKIP = {"whisper-medium"}
@@ -72,7 +73,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
     model = build_model(cfg)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             from repro.core.baselines import make_averager
             from repro.core.group_allreduce import dp_axis_layout
@@ -130,7 +131,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     halve = ["all-reduce"]
     if average_dtype == "bfloat16":

@@ -198,3 +198,24 @@ def collective_summary(hlo_text: str, default_group: int = 1,
         "halved_kinds": list(halve_kinds),
         "unknown_trip_counts": flags["unknown_trip"],
     }
+
+
+def count_ppermutes(jaxpr) -> int:
+    """Count ``ppermute`` equations in a (possibly nested) jaxpr.
+
+    Pre-lowering companion to the HLO parser above: the differential tests
+    and benchmarks use it to pin the bucketed averaging path's collective
+    *launch* count (n_buckets * log2(S)) straight from the trace, before
+    XLA has a chance to fuse or reorder anything.
+    """
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "ppermute":
+            n += 1
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                n += count_ppermutes(inner)
+            elif hasattr(v, "eqns"):
+                n += count_ppermutes(v)
+    return n

@@ -29,6 +29,7 @@ from repro.models.registry import build_model
 from repro.optim import sgd, adamw, cosine_warmup
 from repro.train import build_train_step, stacked_init, dp_axes_of
 from repro.checkpoint import save_checkpoint, consolidate
+from repro import compat
 
 
 class Trainer:
@@ -58,7 +59,7 @@ class Trainer:
                                       imbalanced=imbalanced)
         self.microbatch = microbatch
         self._steps = {}
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             self.params, self.pspecs = stacked_init(self.model, mesh,
                                                     jax.random.PRNGKey(seed))
             self.opt_state = jax.jit(
@@ -86,7 +87,7 @@ class Trainer:
     def run(self, steps: int, log_every: int = 10, ckpt_dir=None,
             ckpt_every=0):
         history = []
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             t0 = time.time()
             for t in range(steps):
                 batch = self._put_batch(t)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -25,7 +27,7 @@ def wsc(x, *spec):
     tests) or named axes are absent, and (b) drops spec entries whose dim is
     not divisible by the mesh axis (e.g. 4 KV heads on a 16-way model axis —
     constraining those forces involuntary remat in the SPMD partitioner)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh.empty:
         return x
     names = set(mesh.axis_names)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import common as cm
 from repro.models import transformer as tfm
 
@@ -207,7 +208,7 @@ def moe_ffn_slotmap(cfg, p, h, capacity: Optional[int] = None):
 
 
 def _shardmap_available(cfg):
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     return (not mesh.empty and "model" in mesh.axis_names
             and mesh.shape["model"] > 1
             and cfg.n_experts % mesh.shape["model"] == 0)
@@ -231,8 +232,8 @@ def moe_ffn_shardmap(cfg, p, h, capacity: Optional[int] = None):
         return moe_ffn_slotmap(cfg, p, h, capacity)
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
-    types = dict(zip(mesh.axis_names, mesh.axis_types))
+    mesh = compat.get_abstract_mesh()
+    types = compat.mesh_axis_types(mesh)
     b, s, d = h.shape
     T = b * s
     E, k = cfg.n_experts, cfg.top_k
@@ -307,8 +308,8 @@ def moe_ffn_shardmap(cfg, p, h, capacity: Optional[int] = None):
         _, (stok_all, sval_all, dropc) = jax.lax.scan(
             bookkeep, jnp.zeros((E,), jnp.int32), (ic, gc))
 
-        inner = jax.shard_map(
-            experts_inner, mesh=jax.sharding.get_abstract_mesh(),
+        inner = compat.shard_map(
+            experts_inner, mesh=compat.get_abstract_mesh(),
             in_specs=(P("model", None, None), P("model", None, None),
                       P("model", None, None), P(None, "model", None),
                       P(None, "model", None), P(None, None, None)),
@@ -318,7 +319,7 @@ def moe_ffn_shardmap(cfg, p, h, capacity: Optional[int] = None):
         return yc.reshape(T_loc, d), dropc.mean()
 
     if dp_auto:
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             routed, mesh=mesh,
             in_specs=(P(dp_spec, None), P(dp_spec, None), P(dp_spec, None),
                       P(None, None, None), P(None, None, None),

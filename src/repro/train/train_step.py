@@ -1,10 +1,18 @@
 """Distributed WAGMA-SGD train step.
 
-Topology: ``jax.shard_map`` *manual* over the data-parallel mesh axes
-(``pod``, ``data``) — local gradients, local optimiser step, then the
-averager's collective (group butterfly / global psum / gossip) — and *auto*
-(GSPMD) over the ``model`` axis for tensor/expert parallelism inside each
-replica.
+Topology: ``shard_map`` (via ``repro.compat``) *manual* over the
+data-parallel mesh axes (``pod``, ``data``) — local gradients, local
+optimiser step, then the averager's collective (group butterfly / global
+psum / gossip) — and *auto* (GSPMD) over the ``model`` axis for
+tensor/expert parallelism inside each replica.
+
+The averager's collective runs the **bucketed fused path** by default
+(DESIGN.md §7): inside the manual region the params pytree is packed into a
+few dtype-homogeneous flat buckets (core/bucketing.py, layout cached across
+traces), each butterfly stage issues one ppermute per bucket instead of one
+per leaf, and the ``(w + recv) * 1/S`` combine streams through the fused
+Pallas kernel with fp32 accumulation.  Per-leaf behaviour is available via
+``WagmaConfig(fused=False)`` and is differentially tested to match.
 
 Because model averaging needs **divergent per-replica weights**, params and
 optimiser state carry a leading dp-replica axis of size P_dp, sharded over
@@ -13,9 +21,12 @@ slice (squeezed inside the manual region). Per-device memory equals classic
 replicated data parallelism. See DESIGN.md §2 for the FSDP tension and the
 hierarchical-WAGMA mitigation.
 
-The group pattern of iteration t is static per compiled variant: the host
-loop calls ``step_for(t)`` which dispatches to one of
-``averager.n_phases + 1`` cached jitted functions (+1 = the tau-sync step).
+**Compiled-phase-variant dispatch.** XLA collectives need static
+permutations, so the group pattern of iteration t is static per compiled
+variant: the host loop (launch/train.py ``Trainer._step_fn``) calls
+``averager.phase_for_step(t)`` / ``sync_due(t)`` and dispatches to one of
+``averager.n_phases + 1`` cached jitted step functions (+1 = the tau-sync
+step).  Every variant shares the same bucket layout cache.
 """
 
 from __future__ import annotations
@@ -27,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.group_allreduce import dp_axis_layout
 from repro.models import common as cm
 
@@ -137,7 +149,7 @@ def build_train_step(model, optimizer, averager, mesh, *, phase: int,
         return expand(p), expand(o), m
 
     lead = P(dp_spec)
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         step, mesh=mesh,
         in_specs=(lead, lead, lead),
         out_specs=(lead, lead, P()),

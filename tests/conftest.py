@@ -1,0 +1,11 @@
+"""Shared pytest setup: make tests/ sibling modules importable.
+
+pytest's rootdir insertion usually handles this, but the explicit insert
+keeps ``import hypothesis_compat`` working under any invocation style
+(``pytest tests/...``, ``python -m pytest`` from a parent dir, IDE runners).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

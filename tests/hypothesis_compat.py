@@ -1,0 +1,47 @@
+"""Optional-``hypothesis`` shim for the property-test modules.
+
+``from hypothesis import given, settings, strategies as st`` made four test
+modules fail *collection* outright on machines without hypothesis (it is a
+dev-only dependency — see requirements-dev.txt).  Property-test modules
+import the same names from here instead:
+
+    from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+With hypothesis installed this re-exports the real thing.  Without it, the
+stand-ins turn each ``@given`` test into a zero-argument test that calls
+``pytest.skip`` at run time — collection always succeeds and every
+non-property test in the module still runs.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(f):
+            def skipper():
+                pytest.skip("hypothesis is not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipper.__name__ = getattr(f, "__name__", "property_test")
+            skipper.__doc__ = getattr(f, "__doc__", None)
+            # keep pytest from introspecting the original signature
+            skipper.__signature__ = inspect.Signature()
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _StrategyStub:
+        """Answers any ``st.<name>(...)`` chain without evaluating anything."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

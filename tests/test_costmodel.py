@@ -11,9 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs.base import InputShape, ModelConfig
-from repro.launch.costmodel import (decode_cost, fwd_flops_per_token,
-                                    param_count, train_cost)
+from repro.core import group_allreduce as ga
+from repro.launch.costmodel import (averaging_comm_cost, decode_cost,
+                                    fwd_flops_per_token, param_count,
+                                    train_cost)
 from repro.models.registry import build_model
 
 
@@ -40,7 +43,7 @@ def test_dense_fwd_flops_vs_xla(kw):
     def fwd(p):
         return model.forward(p, {"tokens": toks}, remat=False)[0]
 
-    ca = jax.jit(fwd).lower(params).compile().cost_analysis()
+    ca = compat.cost_analysis(jax.jit(fwd).lower(params).compile())
     xla = ca["flops"]
     analytic = sum(fwd_flops_per_token(cfg, S).values()) * B * S
     # analytic counts matmuls only; XLA adds elementwise — expect within 35%
@@ -93,3 +96,56 @@ def test_decode_cost_cache_dominates_long_context():
     cfgw = cfg.with_sliding_window(1024)
     repw = decode_cost(cfgw, shape, n_dp=16, n_model=16)
     assert repw.breakdown["cache_read"] < rep.breakdown["cache_read"] / 4
+
+
+# -- alpha-beta collective latency model -------------------------------------
+
+def test_collective_time_alpha_beta_decomposition():
+    alpha, beta = 20e-6, 1.0 / 10e9
+    n_bytes, P, S = 50e6, 64, 8
+    base = ga.collective_time(n_bytes, P, S, "wagma", n_buckets=1,
+                              alpha=alpha, beta=beta)
+    # bytes term is launch-count independent; alpha term scales linearly
+    t300 = ga.collective_time(n_bytes, P, S, "wagma", n_buckets=300,
+                              alpha=alpha, beta=beta)
+    stages = ga.collective_stages(P, S, "wagma")
+    assert stages == 3
+    np.testing.assert_allclose(t300 - base, stages * 299 * alpha, rtol=1e-9)
+    wire = ga.collective_bytes_per_device(n_bytes, P, S, "wagma")
+    np.testing.assert_allclose(base, stages * alpha + wire * beta, rtol=1e-9)
+    # zero-latency network: bucketing is a no-op in the model
+    assert ga.collective_time(n_bytes, P, S, "wagma", n_buckets=300,
+                              alpha=0.0, beta=beta) == \
+        ga.collective_time(n_bytes, P, S, "wagma", n_buckets=1,
+                           alpha=0.0, beta=beta)
+
+
+def test_collective_stages_ordering():
+    # group butterfly must be latency-cheaper than any global collective
+    P, S = 64, 8
+    assert ga.collective_stages(P, S, "wagma") < \
+        ga.collective_stages(P, S, "butterfly_global") < \
+        ga.collective_stages(P, S, "ring_allreduce")
+
+
+def test_averaging_comm_cost_bucketing_speedup():
+    cfg = one_layer_cfg(n_layers=24)
+    rep = averaging_comm_cost(cfg, P=64, S=8, n_leaves=290)
+    assert rep.n_buckets < rep.n_leaves
+    assert rep.t_bucketed < rep.t_per_leaf
+    assert rep.speedup > 1.0
+    # explicit bucket count wins more with fewer buckets
+    rep1 = averaging_comm_cost(cfg, P=64, S=8, n_leaves=290, n_buckets=1)
+    assert rep1.t_bucketed <= rep.t_bucketed
+
+
+def test_cluster_sim_bucketing_win():
+    import os, sys
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks"))
+    from cluster_sim import bucketing_win, comm_time
+    win = bucketing_win(P=64, n_leaves=300, n_buckets=4)
+    assert win["speedup"] > 1.0
+    # same payload, fewer launches -> strictly cheaper step in the model
+    assert comm_time(50e6, 64, 8, "wagma", n_buckets=4) < \
+        comm_time(50e6, 64, 8, "wagma", n_buckets=300)

@@ -2,33 +2,11 @@
 the main pytest process keeps the real single-device CPU view (the dry-run
 flag must never be set globally — see the system design notes)."""
 
-import os
-import subprocess
 import sys
-import textwrap
 
 import pytest
 
-SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "src")
-
-
-def run_sub(body: str, devices: int = 8, timeout: int = 420):
-    script = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-        import sys
-        sys.path.insert(0, {SRC!r})
-        import jax, jax.numpy as jnp
-        import numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, env=env, timeout=timeout)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
-    return out.stdout
+from subproc import SRC, run_sub
 
 
 def test_butterfly_group_average_equals_stacked_simulator():
@@ -43,7 +21,7 @@ def test_butterfly_group_average_equals_stacked_simulator():
         tree = {"w": jnp.asarray(W)}
         for t in range(5):
             ph = av.phase_for_step(t)
-            f = jax.shard_map(lambda tr: av.comm(tr, ph), mesh=mesh,
+            f = compat.shard_map(lambda tr: av.comm(tr, ph), mesh=mesh,
                               in_specs=P(("pod", "data")),
                               out_specs=P(("pod", "data")),
                               axis_names={"pod", "data"})
@@ -55,6 +33,17 @@ def test_butterfly_group_average_equals_stacked_simulator():
     assert "MATCH" in out
 
 
+def _partial_auto_scan_ok():
+    import sys
+    sys.path.insert(0, SRC)
+    from repro import compat
+    return compat.PARTIAL_AUTO_SCAN_OK
+
+
+@pytest.mark.skipif(not _partial_auto_scan_ok(), reason=(
+    "JAX 0.4.x XLA crashes (IsManualSubgroup check) on lax.scan over "
+    "auto-axis-sharded xs inside a partially-manual shard_map; the dp x tp "
+    "train step needs a newer JAX"))
 def test_wagma_train_step_loss_decreases_and_sync_equalises():
     out = run_sub("""
         from repro.configs import get_config, SHAPES
@@ -72,7 +61,7 @@ def test_wagma_train_step_loss_decreases_and_sync_equalises():
                                       ("data",))
         av = make_averager("wagma", names, sizes, group_size=2, tau=4)
         opt = sgd(0.3, momentum=0.9)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params, _ = stacked_init(model, mesh, jax.random.PRNGKey(0))
             opt_state = jax.jit(lambda p: jax.vmap(opt.init)(p))(params)
             bf = make_batch_fn(cfg, SHAPES["train_4k"], seed=0)
@@ -106,7 +95,7 @@ def test_all_baseline_averagers_compile_and_preserve_mean():
         for name in ("dpsgd", "sgp", "adpsgd", "wagma"):
             av = make_averager(name, names, sizes)
             for ph in range(min(av.n_phases, 3)):
-                f = jax.shard_map(lambda tr, p=ph: av.comm(tr, p), mesh=mesh,
+                f = compat.shard_map(lambda tr, p=ph: av.comm(tr, p), mesh=mesh,
                                   in_specs=P("data"), out_specs=P("data"),
                                   axis_names={"data"})
                 got = np.asarray(jax.jit(f)(tree)["w"])
@@ -137,7 +126,7 @@ def test_grad_averager_allreduce_matches_single_worker_equivalent():
         toks = rng.integers(0, cfg.vocab, (1, 32)).astype(np.int32)
         # identical batch on every replica -> pmean(grads) == local grads
         batch_np = {"tokens": np.repeat(toks, 4, 0), "labels": np.repeat(toks, 4, 0)}
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params, _ = stacked_init(model, mesh, jax.random.PRNGKey(0))
             opt_state = jax.jit(lambda p: jax.vmap(opt.init)(p))(params)
             step = build_train_step(model, opt, av, mesh, phase=0, sync=False)

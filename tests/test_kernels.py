@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -78,6 +78,71 @@ def test_group_average_combine_shapes(shape, dtype):
     assert out.shape == shape and out.dtype == dtype
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), rtol=2e-2)
+
+
+# -- group_average_combine: the fused butterfly-combine kernel --------------
+# Direct interpret-mode sweeps (no TPU needed — marked `cpu` so CI always
+# runs them): non-divisible sizes exercise the lane/row padding path,
+# small block_rows forces multi-block grids, bf16 checks the fp32-accumulate
+# + downcast contract, and inv_s sweeps the static scale.
+
+from repro.kernels.group_average import group_average_combine as raw_combine
+
+COMBINE_SIZES = [1, 5, 127, 128, 129, 1000, 8 * 128, 8 * 128 + 3, 4096 + 77]
+
+
+@pytest.mark.cpu
+@pytest.mark.parametrize("n", COMBINE_SIZES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_group_average_combine_interpret_padding_sweep(n, dtype):
+    rng = np.random.default_rng(n)
+    w = jnp.asarray(rng.standard_normal(n), jnp.float32).astype(dtype)
+    r = jnp.asarray(rng.standard_normal(n), jnp.float32).astype(dtype)
+    out = raw_combine(w, r, 0.5, block_rows=8, interpret=True)
+    want = ref.group_average_ref(w, r, 0.5)
+    assert out.shape == w.shape and out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.cpu
+@pytest.mark.parametrize("inv_s", [1.0, 0.5, 0.25, 1 / 3.0, 0.125])
+def test_group_average_combine_inv_s_sweep(inv_s):
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.standard_normal(777), jnp.float32)
+    r = jnp.asarray(rng.standard_normal(777), jnp.float32)
+    out = raw_combine(w, r, inv_s, interpret=True)
+    want = ref.group_average_ref(w, r, inv_s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.cpu
+def test_group_average_combine_fp32_accumulation_beats_bf16():
+    # large + tiny in bf16: accumulating in fp32 then rounding once must
+    # match the fp32 reference rounded to bf16 (the kernel's whole point)
+    w = jnp.full((256,), 256.0, jnp.bfloat16)
+    r = jnp.full((256,), 0.75, jnp.bfloat16)
+    out = raw_combine(w, r, 0.5, interpret=True)
+    want = ((jnp.asarray(w, jnp.float32) + jnp.asarray(r, jnp.float32))
+            * 0.5).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.cpu
+def test_group_average_combine_empty_and_nd_shapes():
+    e = jnp.zeros((0, 4), jnp.float32)
+    out = raw_combine(e, e, 0.5, interpret=True)
+    assert out.shape == (0, 4) and out.dtype == jnp.float32
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.float32)
+    r = jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.float32)
+    out = raw_combine(w, r, 0.25, block_rows=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.group_average_ref(w, r, 0.25)),
+                               rtol=1e-6)
 
 
 RGLRU_CASES = [

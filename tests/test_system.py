@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs import get_config
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import staleness
@@ -96,7 +97,7 @@ def test_serving_greedy_decode_deterministic():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     cfg = get_config("tinyllama-1.1b", smoke=True)
     model = build_model(cfg)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
         prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
