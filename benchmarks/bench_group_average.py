@@ -1,28 +1,39 @@
-"""Microbenchmark: per-leaf vs bucketed vs bucketed+Pallas group averaging.
+"""Microbenchmark: per-leaf vs bucketed (serial) vs overlapped group averaging.
 
-Measures the tentpole claim of the bucketed averaging subsystem on an 8-way
+Measures the tentpole claims of the bucketed averaging subsystem on an 8-way
 forced-host-device CPU mesh:
 
 * **ppermute launches** per averaging step (traced from the jaxpr) drop from
-  ``n_leaves * log2(S)`` to ``n_buckets * log2(S)``;
-* wall time per step for the three realisations of the same math:
+  ``n_leaves * log2(S)`` to ``n_buckets * log2(S)`` — and stay there under
+  the overlapped wavefront schedule (overlap reorders, never multiplies);
+* wall time per step for the four realisations of the same math:
   per-leaf reference, bucketed + jnp combine, bucketed + fused Pallas
-  combine (interpret mode off-TPU, so CPU timings measure the bucketing
-  launch saving, not the kernel — run on a TPU backend for the HBM-floor
-  combine numbers);
-* the alpha-beta model's prediction for the same launch counts at cluster
-  scale (LINK_BW/LATENCY from benchmarks/cluster_sim.py).
+  combine, bucketed + overlapped pipeline (interpret mode off-TPU, so CPU
+  timings measure the bucketing/launch saving, not the kernel — run on a
+  TPU backend for the HBM-floor combine numbers);
+* the alpha-beta-gamma model's prediction at cluster scale for the
+  transformer_wmt config (the paper's own model): serial-bucketed step time
+  (``wire + combine`` per stage, fixed 32 MiB budget) vs overlapped step
+  time (``max(wire, combine) + fill`` at the modeled-optimal budget from
+  ``bucketing.choose_bucket_bytes``).
 
-Usage:  python benchmarks/bench_group_average.py [--layers 24] [--d 512]
+Results land in ``BENCH_group_average.json`` at the repo root so the perf
+trajectory is machine-trackable PR over PR.
+
+Usage:
+    python benchmarks/bench_group_average.py [--layers 24] [--d 512]
+    python benchmarks/bench_group_average.py --check      # model-only, fast;
+        exits non-zero unless overlapped < serial for transformer_wmt
 """
 
 import argparse
+import json
 import os
 import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import time
 
@@ -35,6 +46,8 @@ from repro import compat
 from repro.core import bucketing, grouping
 from repro.core import group_allreduce as ga
 from repro.launch.hlo_analysis import count_ppermutes
+
+OUT_JSON = os.path.join(_ROOT, "BENCH_group_average.json")
 
 
 def transformer_like_tree(rng, n_dp: int, layers: int, d: int):
@@ -64,15 +77,57 @@ def bench(fn, tree, iters: int) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--layers", type=int, default=12)
-    ap.add_argument("--d", type=int, default=256)
-    ap.add_argument("--S", type=int, default=4)
-    ap.add_argument("--iters", type=int, default=10)
-    ap.add_argument("--bucket-mb", type=int, default=32)
-    args = ap.parse_args()
+def modeled_transformer_wmt(*, P_cluster: int = 64, tau: int = 10) -> dict:
+    """Alpha-beta-gamma model for the paper's WMT transformer at scale.
 
+    Serial baseline: fixed 32 MiB budget, per-stage ``wire + combine``.
+    Overlapped: modeled-optimal budget, per-stage ``max(wire, combine)``
+    plus pipeline fill/drain (core/overlap.py wavefront schedule).  The
+    modeling itself is ``costmodel.averaging_comm_cost`` — this function
+    only supplies the exact payload/leaf count from the real model's
+    ``eval_shape`` and reshapes the CommReport into the tracked JSON.
+    """
+    from repro.configs import get_config
+    from repro.launch.costmodel import averaging_comm_cost
+    from repro.models.registry import build_model
+
+    cfg = get_config("transformer-wmt")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+    payload = bucketing.tree_payload_bytes(shapes)   # exact, real dtypes
+    S = grouping.default_group_size(P_cluster)
+    stages = grouping.ilog2(S)
+
+    rep = averaging_comm_cost(cfg, P=P_cluster, S=S, tau=tau,
+                              n_leaves=n_leaves, payload_bytes=payload)
+    return {
+        "config": cfg.name,
+        "P": P_cluster, "S": S, "tau": tau,
+        "payload_bytes": payload, "n_leaves": n_leaves,
+        "alpha_s": ga.DEFAULT_ALPHA, "beta_s_per_byte": ga.DEFAULT_BETA,
+        "gamma_s_per_byte": ga.DEFAULT_GAMMA,
+        "serial": {"bucket_bytes": bucketing.DEFAULT_BUCKET_BYTES,
+                   "n_buckets": rep.n_buckets,
+                   "launches_per_group_step": rep.n_buckets * stages,
+                   "modeled_step_s": rep.t_serial_gamma},
+        "overlapped": {"bucket_bytes": rep.chosen_bucket_bytes,
+                       "n_buckets": rep.n_buckets_overlapped,
+                       "launches_per_group_step":
+                           rep.n_buckets_overlapped * stages,
+                       "modeled_step_s": rep.t_overlapped},
+        "overlapped_same_budget_step_s": rep.t_overlapped_same_budget,
+        "per_leaf_step_s": rep.t_per_leaf,
+        "chosen_bucket_bytes": rep.chosen_bucket_bytes,
+        "overlap_win": rep.overlap_speedup,
+        "combine_hidden_s_per_step":
+            rep.t_serial_gamma - rep.t_overlapped_same_budget,
+    }
+
+
+def live_mesh_bench(args) -> dict:
+    """Wall-clock + launch-count measurement on the 8-device CPU mesh."""
     n_dp, S = 8, args.S
     mesh = jax.make_mesh((n_dp,), ("data",))
     names, sizes = ga.dp_axis_layout(("data",), {"data": n_dp}, ("data",))
@@ -84,13 +139,13 @@ def main():
     bucket_bytes = args.bucket_mb * 1024 * 1024
     layout = bucketing.layout_for(local, max_bucket_bytes=bucket_bytes)
     stages = grouping.ilog2(S)
-    payload = sum(l.size * l.dtype.itemsize
-                  for l in jax.tree.leaves(local))
+    payload = bucketing.tree_payload_bytes(local)
 
     variants = {
         "per_leaf": dict(fused=False),
-        "bucketed_jnp": dict(fused=True, use_pallas=False),
-        "bucketed_pallas": dict(fused=True, use_pallas=True),
+        "bucketed_jnp": dict(fused=True, use_pallas=False, overlap=False),
+        "bucketed_pallas": dict(fused=True, use_pallas=True, overlap=False),
+        "overlapped_pallas": dict(fused=True, use_pallas=True, overlap=True),
     }
     print(f"tree: {n_leaves} leaves, {payload / 1e6:.1f} MB/replica; "
           f"S={S} ({stages} butterfly stages); "
@@ -106,25 +161,60 @@ def main():
             axis_names={"data"}))
         n_pp = count_ppermutes(jax.make_jaxpr(f)(tree).jaxpr)
         dt = bench(f, tree, args.iters)
-        results[name] = (n_pp, dt)
-        print(f"{name:16s} ppermutes/step {n_pp:5d}   wall {dt * 1e3:8.2f} ms")
+        results[name] = {"ppermutes_per_step": n_pp, "wall_s": dt}
+        print(f"{name:18s} ppermutes/step {n_pp:5d}   wall {dt * 1e3:8.2f} ms")
 
-    n_pp_leaf = results["per_leaf"][0]
-    n_pp_fused = results["bucketed_pallas"][0]
+    n_pp_leaf = results["per_leaf"]["ppermutes_per_step"]
+    n_pp_fused = results["bucketed_pallas"]["ppermutes_per_step"]
     assert n_pp_leaf == n_leaves * stages
     assert n_pp_fused == layout.n_buckets * stages
+    # the wavefront schedule reorders launches but never adds any
+    assert results["overlapped_pallas"]["ppermutes_per_step"] == n_pp_fused
     print(f"ppermute launches: {n_leaves} x log2(S) -> "
           f"{layout.n_buckets} x log2(S)  "
           f"({n_pp_leaf} -> {n_pp_fused}, {n_pp_leaf / n_pp_fused:.1f}x fewer)")
+    return {"n_leaves": n_leaves, "payload_bytes": payload,
+            "S": S, "n_buckets": layout.n_buckets, "variants": results}
 
-    # alpha-beta prediction at cluster scale (same launch counts)
-    from cluster_sim import comm_time
-    t_leaf = comm_time(payload, 64, S, "wagma", n_buckets=n_leaves)
-    t_fused = comm_time(payload, 64, S, "wagma", n_buckets=layout.n_buckets)
-    print(f"alpha-beta model @ P=64: per-leaf {t_leaf * 1e3:.2f} ms/step, "
-          f"bucketed {t_fused * 1e3:.2f} ms/step "
-          f"({t_leaf / t_fused:.1f}x)")
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--S", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--bucket-mb", type=int, default=32)
+    ap.add_argument("--check", action="store_true",
+                    help="model-only: assert overlapped < serial for "
+                         "transformer_wmt and write the JSON")
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args()
+
+    report = {"modeled_transformer_wmt": modeled_transformer_wmt()}
+    m = report["modeled_transformer_wmt"]
+    print(f"[model] transformer_wmt @ P={m['P']} S={m['S']}: "
+          f"serial {m['serial']['modeled_step_s'] * 1e3:.3f} ms/step "
+          f"({m['serial']['n_buckets']} x 32MiB buckets), overlapped "
+          f"{m['overlapped']['modeled_step_s'] * 1e3:.3f} ms/step "
+          f"({m['overlapped']['n_buckets']} x "
+          f"{m['chosen_bucket_bytes'] // 2**20}MiB buckets, "
+          f"{m['overlap_win']:.3f}x)")
+
+    if not args.check:
+        report["live_8dev_cpu"] = live_mesh_bench(args)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    ok = (m["overlapped"]["modeled_step_s"] < m["serial"]["modeled_step_s"])
+    if args.check:
+        print("CHECK", "PASS" if ok else "FAIL",
+              f"(overlapped {m['overlapped']['modeled_step_s']:.6e} "
+              f"< serial {m['serial']['modeled_step_s']:.6e})")
+        return 0 if ok else 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

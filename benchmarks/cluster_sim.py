@@ -36,11 +36,13 @@ import numpy as np
 
 from repro.core.group_allreduce import (alpha_beta_time,
                                         collective_bytes_per_device,
-                                        DEFAULT_ALPHA, DEFAULT_BETA)
+                                        DEFAULT_ALPHA, DEFAULT_BETA,
+                                        DEFAULT_GAMMA)
 from repro.core import grouping
 
 LINK_BW = 1.0 / DEFAULT_BETA   # bytes/s per node (Piz Daint-scale Aries)
 LATENCY = DEFAULT_ALPHA        # per collective launch
+COMBINE_SPB = DEFAULT_GAMMA    # combine seconds/payload byte per stage
 
 
 def compute_time_samples(rng, P, steps, workload: str):
@@ -58,12 +60,15 @@ def compute_time_samples(rng, P, steps, workload: str):
 
 
 def comm_time(n_bytes: float, P: int, S: int, algo: str, *,
-              n_buckets: int = 1) -> float:
+              n_buckets: int = 1, gamma: float = 0.0,
+              overlap: bool = False) -> float:
     """Alpha-beta collective time: stages x n_buckets x alpha + bytes x beta.
 
     ``n_buckets`` is the launch count per serial stage: 1-few for the
     bucketed fused averager, the pytree leaf count (hundreds) for the
-    per-leaf path.
+    per-leaf path.  ``gamma`` adds the per-stage combine arithmetic and
+    ``overlap=True`` runs it through the wavefront pipeline model
+    (``max(wire, combine) + fill`` per stage, DESIGN.md §8).
     """
     wire = collective_bytes_per_device(n_bytes, P, max(S, 2), {
         "wagma": "wagma", "allreduce": "ring_allreduce",
@@ -77,7 +82,8 @@ def comm_time(n_bytes: float, P: int, S: int, algo: str, *,
               "dpsgd": 2, "sgp": 1, "adpsgd": 1,
               "eager": 2 * (P - 1)}[algo]
     return alpha_beta_time(wire, stages, n_buckets=n_buckets,
-                           alpha=LATENCY, beta=1.0 / LINK_BW)
+                           alpha=LATENCY, beta=1.0 / LINK_BW,
+                           gamma=gamma, overlap=overlap)
 
 
 @dataclass
@@ -164,3 +170,22 @@ def bucketing_win(P: int = 64, *, model_bytes: float = 50e6,
     return {"per_leaf_steps_per_hour": leaf.steps_per_hour,
             "bucketed_steps_per_hour": bucketed.steps_per_hour,
             "speedup": bucketed.steps_per_hour / leaf.steps_per_hour}
+
+
+def overlap_win(P: int = 64, *, model_bytes: float = 50e6, S=None,
+                n_buckets: int = 4, gamma: float = COMBINE_SPB) -> dict:
+    """Modeled per-step win of the overlapped bucket pipeline (DESIGN §8).
+
+    Same payload, same launch count — the serial schedule pays
+    ``wire + combine`` per butterfly stage, the wavefront schedule pays
+    ``max(wire, combine)`` plus pipeline fill/drain, hiding the combine
+    behind the wire whenever there is more than one bucket in flight.
+    """
+    S = S or grouping.default_group_size(P)
+    serial = comm_time(model_bytes, P, S, "wagma", n_buckets=n_buckets,
+                       gamma=gamma, overlap=False)
+    overlapped = comm_time(model_bytes, P, S, "wagma", n_buckets=n_buckets,
+                           gamma=gamma, overlap=True)
+    return {"serial_comm_s": serial, "overlapped_comm_s": overlapped,
+            "combine_hidden_s": serial - overlapped,
+            "speedup": serial / overlapped}

@@ -5,10 +5,13 @@
                        few dtype-homogeneous 1-D buckets (cached layout) so
                        every averager launches one collective per *bucket*
                        per stage instead of one per leaf (DESIGN.md §7)
+* overlap.py         — software-pipelined bucket scheduler: wavefront over
+                       the (bucket, stage) grid so bucket k+1's ppermute is
+                       on the wire while bucket k combines (DESIGN.md §8)
 * group_allreduce.py — butterfly group allreduce via shard_map+ppermute,
-                       bucketed fused path (Pallas combine) + per-leaf
-                       reference path, stacked simulator, alpha-beta
-                       collective cost model
+                       bucketed fused path (Pallas combine, overlapped by
+                       default) + per-leaf reference path, stacked
+                       simulator, alpha-beta(-gamma) collective cost model
 * wagma.py           — Algorithm 2 (WAGMA-SGD) as a composable averager
 * baselines.py       — the paper's comparison set (Table I), same bucketing
 * staleness.py       — wait-avoidance/straggler semantics simulator

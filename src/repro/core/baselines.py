@@ -17,6 +17,13 @@ launches one collective per bucket instead of one per leaf, with fp32
 accumulation per bucket.  ``fused=False`` restores the per-leaf reference
 path; the differential suite pins the two to agree.
 
+Mixes are expressed as an ``issue`` half (the collectives) and a ``combine``
+half (the local arithmetic) so the bucketed path can run the single-stage
+overlap pipeline (``overlap=True`` default, core/overlap.py): every bucket's
+collectives are issued before any bucket's combine runs, hiding the gossip
+arithmetic of bucket k behind the wire time of bucket k+1 — the same
+wavefront idea the WAGMA butterfly uses across its log2(S) stages.
+
 Distributed semantics on a lock-step SPMD pod:
 
 * Allreduce-SGD — synchronous global gradient pmean (standard data-parallel).
@@ -48,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bucketing, grouping
+from repro.core import overlap as pipeline
 from repro.core.group_allreduce import (butterfly_exchange, global_average)
 
 
@@ -57,12 +65,14 @@ class _AveragerBase:
 
     def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int],
                  fused: bool = True,
-                 bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES):
+                 bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+                 overlap: bool = True):
         self.axis_names = tuple(dp_axis_names)
         self.axis_sizes = tuple(dp_axis_sizes)
         self.P = int(np.prod(dp_axis_sizes))
         self.fused = fused
         self.bucket_bytes = bucket_bytes
+        self.overlap = overlap
 
     def phase_for_step(self, t: int) -> int:
         return t % self.n_phases
@@ -77,20 +87,30 @@ class _AveragerBase:
         return global_average(tree, self.axis_names, fused=self.fused,
                               bucket_bytes=self.bucket_bytes)
 
-    def _mix_tree(self, tree, mix):
+    def _mix_tree(self, tree, issue, combine):
         """Apply a flat fp32 gossip mix per bucket (fused) or per leaf.
 
-        ``mix`` maps an fp32 buffer to an fp32 buffer of the same shape and
-        must be shape-polymorphic (ppermute/psum are), so the exact same
-        closure serves both granularities — the differential tests exploit
-        that to pin fused == per-leaf.
+        The mix is split into its collective half ``issue(buf) -> recv``
+        (shape-polymorphic — ppermute/psum are) and its arithmetic half
+        ``combine(buf, recv) -> buf``.  Per leaf and per serial bucket the
+        two halves compose back into the original mix, so all granularities
+        compute identical element math — the differential tests exploit that
+        to pin fused == per-leaf.  With ``overlap=True`` the fused path
+        issues every bucket's collectives before any bucket's combine
+        (core/overlap.py single-stage pipeline).
         """
-        if self.fused:
+        mix = lambda buf: combine(buf, issue(buf))
+        if not self.fused:
+            return jax.tree.map(
+                lambda w: mix(w.astype(jnp.float32)).astype(w.dtype), tree)
+        if not self.overlap:
             return bucketing.tree_map_bucketed(
                 mix, tree, compute_dtype=jnp.float32,
                 max_bucket_bytes=self.bucket_bytes)
-        return jax.tree.map(
-            lambda w: mix(w.astype(jnp.float32)).astype(w.dtype), tree)
+        return bucketing.tree_map_buckets(
+            lambda bufs: pipeline.overlapped_mix(bufs, issue, combine),
+            tree, compute_dtype=jnp.float32,
+            max_bucket_bytes=self.bucket_bytes)
 
 
 class AllreduceAverager(_AveragerBase):
@@ -100,9 +120,11 @@ class AllreduceAverager(_AveragerBase):
 
     def comm(self, tree, phase: int):
         # fp32 accumulation (also: XLA-CPU crashes on bf16 manual all-reduce);
-        # bucketed: one pmean per bucket — the MG-WFBP merged-gradient layout
+        # bucketed: one pmean per bucket — the MG-WFBP merged-gradient layout.
+        # The reduction IS the collective, so combine is the identity.
         return self._mix_tree(
-            tree, lambda g: jax.lax.pmean(g, self.axis_names))
+            tree, lambda g: jax.lax.pmean(g, self.axis_names),
+            lambda g, r: r)
 
 
 class LocalSGDAverager(_AveragerBase):
@@ -132,12 +154,15 @@ class DPSGDAverager(_AveragerBase):
         fwd = [(i, (i + 1) % n) for i in range(n)]
         bwd = [(i, (i - 1) % n) for i in range(n)]
 
-        def mix(acc):
-            left = jax.lax.ppermute(acc, self.axis_names[0], fwd)
-            right = jax.lax.ppermute(acc, self.axis_names[0], bwd)
+        def issue(acc):
+            return (jax.lax.ppermute(acc, self.axis_names[0], fwd),
+                    jax.lax.ppermute(acc, self.axis_names[0], bwd))
+
+        def combine(acc, recv):
+            left, right = recv
             return (acc + left + right) / 3.0
 
-        return self._mix_tree(tree, mix)
+        return self._mix_tree(tree, issue, combine)
 
 
 class SGPAverager(_AveragerBase):
@@ -151,15 +176,19 @@ class SGPAverager(_AveragerBase):
         self.n_phases = grouping.ilog2(self.P)
 
     def comm(self, tree, phase: int):
-        def mix(acc):
+        def issue(acc):
+            return tuple(
+                butterfly_exchange(acc, (phase + k) % grouping.ilog2(self.P),
+                                   self.axis_names, self.axis_sizes)
+                for k in range(self.neighbours))
+
+        def combine(acc, recvs):
             total = acc
-            for k in range(self.neighbours):
-                bit = (phase + k) % grouping.ilog2(self.P)
-                total = total + butterfly_exchange(acc, bit, self.axis_names,
-                                                   self.axis_sizes)
+            for r in recvs:
+                total = total + r
             return total / (self.neighbours + 1.0)
 
-        return self._mix_tree(tree, mix)
+        return self._mix_tree(tree, issue, combine)
 
 
 class ADPSGDAverager(_AveragerBase):
@@ -171,12 +200,11 @@ class ADPSGDAverager(_AveragerBase):
         self.n_phases = grouping.ilog2(self.P)
 
     def comm(self, tree, phase: int):
-        def mix(acc):
-            other = butterfly_exchange(acc, phase, self.axis_names,
-                                       self.axis_sizes)
-            return (acc + other) / 2.0
-
-        return self._mix_tree(tree, mix)
+        return self._mix_tree(
+            tree,
+            lambda acc: butterfly_exchange(acc, phase, self.axis_names,
+                                           self.axis_sizes),
+            lambda acc, other: (acc + other) / 2.0)
 
 
 class EagerSGDAverager(AllreduceAverager):

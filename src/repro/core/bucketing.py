@@ -32,9 +32,13 @@ Layout rules:
 * zero-size leaves occupy zero-length slices — they survive the round trip
   without ever touching a collective.
 
-``tree_map_bucketed`` is the generic driver used by every averager (WAGMA
-butterfly, global psum, gossip baselines): apply a flat-buffer mixing
-function once per bucket instead of once per leaf.
+``tree_map_buckets`` is the generic driver used by every averager (WAGMA
+butterfly, global psum, gossip baselines): the mixing function sees the
+whole bucket list at once, which is what lets the overlapped wavefront
+scheduler (``core/overlap.py``, DESIGN.md §8) interleave collectives and
+combines across buckets.  ``tree_map_bucketed`` is the serial per-bucket
+wrapper kept for reference paths; ``choose_bucket_bytes`` picks the budget
+that minimises the modeled overlapped step time.
 """
 
 from __future__ import annotations
@@ -123,6 +127,17 @@ def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
 _LAYOUT_CACHE: Dict[tuple, BucketLayout] = {}
 
 
+def clear_layout_cache() -> None:
+    """Drop all cached layouts (and the treedefs they retain).
+
+    Layouts are keyed on tree structure, so long-lived processes that sweep
+    many distinct meshes/models (parametrised tests, dry-run sweeps) would
+    otherwise accumulate one entry — including a retained PyTreeDef — per
+    structure forever.  Test fixtures call this between cases.
+    """
+    _LAYOUT_CACHE.clear()
+
+
 def layout_for(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
                ) -> BucketLayout:
     """Cached :func:`build_layout` keyed on structure, not array identity."""
@@ -171,24 +186,88 @@ def unpack(buckets: Sequence[jax.Array], layout: BucketLayout):
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
+def tree_map_buckets(fn: Callable[[list], list], tree, *,
+                     compute_dtype=jnp.float32,
+                     max_bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Apply a mixing function to the whole LIST of flat buckets at once.
+
+    ``fn`` maps the list of 1-D buffers to a list of same-shaped buffers.
+    Seeing every bucket in one call is what lets the overlapped scheduler
+    (core/overlap.py) interleave collectives and combines *across* buckets —
+    the per-bucket driver below cannot express that.  Buffers are presented
+    in ``compute_dtype`` (``None`` = storage dtype) and cast back, so bf16
+    models average with fp32 accumulation while touching each leaf exactly
+    once for pack and once for unpack.  Zero-size buckets are passed through
+    to ``fn`` (callers skip them) and restored untouched.
+    """
+    layout = layout_for(tree, max_bucket_bytes=max_bucket_bytes)
+    bufs = pack(tree, layout)
+    origs = [b.dtype for b in bufs]
+    accs = [b.astype(compute_dtype) if compute_dtype is not None and b.size
+            else b for b in bufs]
+    outs = fn(list(accs))
+    if len(outs) != len(bufs):
+        raise ValueError(f"bucket mixing fn returned {len(outs)} buffers "
+                         f"for {len(bufs)} buckets")
+    return unpack(tuple(o.astype(d) for o, d in zip(outs, origs)), layout)
+
+
 def tree_map_bucketed(fn: Callable[[jax.Array], jax.Array], tree, *,
                       compute_dtype=jnp.float32,
                       max_bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Apply a flat-buffer mixing function once per bucket of ``tree``.
 
     ``fn`` maps a 1-D buffer to a same-shaped 1-D buffer (e.g. a butterfly
-    exchange-and-combine, a pmean, a gossip mix).  Buffers are presented in
-    ``compute_dtype`` (``None`` = the bucket's storage dtype) and results
-    cast back, so bf16 models average with fp32 accumulation while touching
-    each leaf exactly once for pack and once for unpack.
+    exchange-and-combine, a pmean, a gossip mix).  Per-bucket wrapper over
+    :func:`tree_map_buckets` — the serial reference; the overlapped paths
+    use the list-level driver directly.
     """
-    layout = layout_for(tree, max_bucket_bytes=max_bucket_bytes)
-    out = []
-    for buf in pack(tree, layout):
-        if buf.size == 0:
-            out.append(buf)
-            continue
-        orig = buf.dtype
-        acc = buf.astype(compute_dtype) if compute_dtype is not None else buf
-        out.append(fn(acc).astype(orig))
-    return unpack(tuple(out), layout)
+    return tree_map_buckets(
+        lambda bufs: [fn(b) if b.size else b for b in bufs], tree,
+        compute_dtype=compute_dtype, max_bucket_bytes=max_bucket_bytes)
+
+
+def tree_payload_bytes(tree) -> int:
+    """Total leaf bytes of a params pytree (arrays or ShapeDtypeStructs)."""
+    return sum(int(np.prod(l.shape, dtype=np.int64)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+# Candidate budgets swept by :func:`choose_bucket_bytes` — 1 MiB..128 MiB in
+# octaves brackets every regime the alpha-beta model distinguishes: small
+# budgets buy pipelining granularity (more overlap slots), large budgets buy
+# fewer per-collective launch latencies.
+BUCKET_BYTES_CANDIDATES = tuple((1 << i) * 1024 * 1024 for i in range(8))
+
+
+def choose_bucket_bytes(payload_bytes: int, *, P: int, S: int,
+                        tau: int = 10,
+                        overlap: bool = True,
+                        alpha: float = None, beta: float = None,
+                        gamma: float = None,
+                        candidates: Sequence[int] = BUCKET_BYTES_CANDIDATES
+                        ) -> int:
+    """Bucket budget minimising the modeled averaging step time.
+
+    Replaces the fixed 32 MiB default: sweeps ``candidates`` through the
+    (overlapped) alpha-beta model — per-stage time
+    ``launches*alpha + max(wire, combine) + fill/drain`` — and returns the
+    argmin.  The tension the sweep resolves: fewer buckets amortise alpha,
+    but the overlapped pipeline needs several buckets per model before the
+    combine hides behind the wire at all.  Pure host-side arithmetic on
+    static quantities, so the choice is free at trace time.
+    """
+    from repro.core import group_allreduce as ga   # circular-import guard
+    alpha = ga.DEFAULT_ALPHA if alpha is None else alpha
+    beta = ga.DEFAULT_BETA if beta is None else beta
+    gamma = ga.DEFAULT_GAMMA if gamma is None else gamma
+    payload = max(int(payload_bytes), 1)
+    best, best_t = None, None
+    for cand in candidates:
+        n_buckets = max(1, -(-payload // cand))
+        t = ga.wagma_step_time(payload, P, S, tau=tau, n_buckets=n_buckets,
+                               alpha=alpha, beta=beta, gamma=gamma,
+                               overlap=overlap)
+        if best_t is None or t < best_t:
+            best, best_t = cand, t
+    return best

@@ -24,6 +24,20 @@ one HBM read per operand) instead of two unfused elementwise passes.
 ``fused=False`` keeps the per-leaf reference path; the two are differentially
 tested against each other and the stacked simulator on every phase offset.
 
+**Overlapped bucket pipeline (default on the fused path).**  With
+``overlap=True`` the buckets are no longer walked serially: the wavefront
+scheduler (``core/overlap.py``, DESIGN.md §8) issues bucket k+1's ppermute
+before bucket k's combine runs and lets each bucket advance to its next
+butterfly stage without barriering on the others, so combine time hides
+behind wire time (modeled by ``collective_time(overlap=True)``: per-stage
+``max(wire, combine) + fill`` instead of ``wire + combine``).  Same-tick
+combines share one multi-bucket Pallas launch.  Per-bucket stage order is
+unchanged — only inter-bucket interleaving — so ``overlap=True`` stays
+bit-compatible with the serial bucketed path and the per-leaf reference.
+``bucket_bytes=None`` (default) picks the budget that minimises the modeled
+overlapped step time (``bucketing.choose_bucket_bytes``) instead of the
+fixed 32 MiB.
+
 Because XLA permutations are static, functions here take a *static* phase
 offset; the training loop cycles through ``grouping.distinct_offsets`` and
 dispatches the matching compiled step (see train/train_step.py).
@@ -46,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bucketing, grouping
+from repro.core import overlap as pipeline
 
 
 # ---------------------------------------------------------------------------
@@ -86,11 +101,44 @@ def _stage_combine(acc, recv, scale: float, use_pallas: bool):
     return (acc + recv) * jnp.asarray(scale, acc.dtype)
 
 
+def _combine_many(accs, recvs, scale: float, use_pallas: bool):
+    """Batch of independent (acc, recv) combines — one wavefront tick.
+
+    The Pallas route groups the batch by dtype and feeds each group to ONE
+    multi-bucket kernel launch (grid walks buckets x row-tiles); the jnp
+    route does the same per-pair arithmetic as :func:`_stage_combine`.
+    """
+    if not use_pallas:
+        return [(a + r) * jnp.asarray(scale, a.dtype)
+                for a, r in zip(accs, recvs)]
+    from repro.kernels import ops
+    outs = [None] * len(accs)
+    by_dtype = {}
+    for i, a in enumerate(accs):
+        by_dtype.setdefault(jnp.dtype(a.dtype), []).append(i)
+    for idxs in by_dtype.values():
+        res = ops.group_average_combine_multi([accs[i] for i in idxs],
+                                              [recvs[i] for i in idxs], scale)
+        for i, o in zip(idxs, res):
+            outs[i] = o
+    return outs
+
+
+def resolve_bucket_bytes(tree, bucket_bytes: Optional[int], *, P: int,
+                         S: int, tau: int = 10) -> int:
+    """``None`` -> the modeled-optimal budget for this tree's payload."""
+    if bucket_bytes is not None:
+        return bucket_bytes
+    return bucketing.choose_bucket_bytes(
+        bucketing.tree_payload_bytes(tree), P=P, S=S, tau=tau)
+
+
 def group_average(tree, *, offset: int, P: int, S: int,
                   axis_names: Sequence[str], axis_sizes: Sequence[int],
                   average_dtype=None, fused: bool = True,
-                  bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
-                  use_pallas: Optional[bool] = None):
+                  bucket_bytes: Optional[int] = None,
+                  use_pallas: Optional[bool] = None,
+                  overlap: bool = True, tau: int = 10):
     """Group model averaging over groups of size S (paper Alg. 2 line 9+11).
 
     Must be called inside shard_map manual over ``axis_names``. Applies
@@ -101,9 +149,17 @@ def group_average(tree, *, offset: int, P: int, S: int,
     per bucket per stage, combine through the fused Pallas kernel (fp32
     accumulation; ``use_pallas=False`` forces the jnp combine, ``None`` means
     "pallas when fused").  ``fused=False`` is the per-leaf reference path.
-    Both orders the per-element arithmetic identically — log2(S) adds then
-    one scale — so they agree to fp32-accumulation tolerance (bit-exact for
-    fp32 accumulation dtypes).
+    ``overlap=True`` (default) emits the fused path in the wavefront order of
+    ``core/overlap.py`` — bucket k+1's ppermute ahead of bucket k's combine,
+    no inter-bucket stage barrier, same-tick combines batched into one
+    multi-bucket Pallas launch; ``overlap=False`` walks buckets serially.
+    ``bucket_bytes=None`` picks the modeled-optimal budget
+    (``bucketing.choose_bucket_bytes``; ``tau`` only feeds that model — pass
+    the caller's sync period so the choice matches what analysis tools like
+    ``dryrun.bucket_collective_summary`` recompute).  All variants order
+    each element's
+    arithmetic identically — log2(S) adds then one scale — so they agree to
+    fp32-accumulation tolerance (bit-exact for fp32 accumulation dtypes).
     """
     bits = grouping.mask_bits_for_offset(P, S, offset)
     inv_s = 1.0 / S
@@ -120,25 +176,41 @@ def group_average(tree, *, offset: int, P: int, S: int,
         return jax.tree.map(avg_leaf, tree)
 
     pallas = True if use_pallas is None else use_pallas
+    bb = resolve_bucket_bytes(tree, bucket_bytes, P=P, S=S, tau=tau)
 
-    def mix(acc):
-        for i, bit in enumerate(bits):
-            recv = butterfly_exchange(acc, bit, axis_names, axis_sizes)
-            scale = inv_s if i == len(bits) - 1 else 1.0
-            acc = _stage_combine(acc, recv, scale, pallas)
-        return acc
+    if not overlap:
+        def mix(acc):
+            for i, bit in enumerate(bits):
+                recv = butterfly_exchange(acc, bit, axis_names, axis_sizes)
+                scale = inv_s if i == len(bits) - 1 else 1.0
+                acc = _stage_combine(acc, recv, scale, pallas)
+            return acc
 
-    return bucketing.tree_map_bucketed(mix, tree,
-                                       compute_dtype=average_dtype,
-                                       max_bucket_bytes=bucket_bytes)
+        return bucketing.tree_map_bucketed(mix, tree,
+                                           compute_dtype=average_dtype,
+                                           max_bucket_bytes=bb)
+
+    def mix_all(bufs):
+        return pipeline.overlapped_butterfly(
+            bufs, bits, inv_s,
+            exchange=lambda buf, bit: butterfly_exchange(
+                buf, bit, axis_names, axis_sizes),
+            combine_many=lambda accs, recvs, scale: _combine_many(
+                accs, recvs, scale, pallas))
+
+    return bucketing.tree_map_buckets(mix_all, tree,
+                                      compute_dtype=average_dtype,
+                                      max_bucket_bytes=bb)
 
 
 def global_average(tree, axis_names: Sequence[str], *, fused: bool = True,
-                   bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES):
+                   bucket_bytes: Optional[int] = None):
     """tau-periodic synchronous allreduce mean over all dp replicas (line 16).
 
     ``fused=True`` buckets the tree first: one pmean per bucket instead of
     one per leaf (same payload bytes, log2(P)x fewer collective launches).
+    The reduction arithmetic lives *inside* the pmean, so there is no combine
+    to pipeline here; ``bucket_bytes=None`` keeps the default budget.
     """
     names = tuple(axis_names)
 
@@ -150,7 +222,8 @@ def global_average(tree, axis_names: Sequence[str], *, fused: bool = True,
 
     return bucketing.tree_map_bucketed(
         lambda buf: jax.lax.pmean(buf, names), tree,
-        compute_dtype=jnp.float32, max_bucket_bytes=bucket_bytes)
+        compute_dtype=jnp.float32,
+        max_bucket_bytes=bucket_bytes or bucketing.DEFAULT_BUCKET_BYTES)
 
 
 # ---------------------------------------------------------------------------
@@ -225,44 +298,76 @@ def collective_stages(P: int, S: int, algorithm: str = "wagma") -> int:
 # with measured values). benchmarks/cluster_sim.py reuses these.
 DEFAULT_ALPHA = 20e-6          # seconds per collective launch
 DEFAULT_BETA = 1.0 / 10e9      # seconds per wire byte
+# Combine throughput: each butterfly stage streams the payload through the
+# fused kernel — 2 reads + 1 write at P100-scale HBM (~700 GB/s), so
+# seconds per *payload* byte per stage.  gamma << beta is exactly why the
+# combine can hide entirely behind the wire once the schedule overlaps them.
+DEFAULT_GAMMA = 3.0 / 700e9
 
 
 def alpha_beta_time(wire_bytes: float, stages: int, *, n_buckets: int = 1,
                     alpha: float = DEFAULT_ALPHA,
-                    beta: float = DEFAULT_BETA) -> float:
-    """The alpha-beta formula: stages * n_buckets * alpha + bytes * beta.
+                    beta: float = DEFAULT_BETA,
+                    gamma: float = 0.0,
+                    overlap: bool = False) -> float:
+    """The alpha-beta(-gamma) formula for ``stages`` serial collective rounds.
 
-    Every serial stage launches one collective *per bucket* (per leaf on the
-    unfused path — pass ``n_buckets=n_leaves`` to model it), each paying the
-    per-collective latency ``alpha``; payload bytes ride the inverse
-    bandwidth ``beta`` regardless of bucketing.  This is the lever MG-WFBP
-    optimises: bucketing keeps alpha*stages*n_buckets ~constant while
-    per-leaf schedules pay hundreds of alphas per stage.
+    Serial (``overlap=False``):
+        stages * n_buckets * alpha + wire_bytes * (beta + gamma)
+    — every stage launches one collective per bucket (per leaf on the
+    unfused path; pass ``n_buckets=n_leaves`` to model it), each paying the
+    launch latency ``alpha``; payload bytes ride the inverse bandwidth
+    ``beta``; ``gamma`` adds the per-stage combine arithmetic the wire must
+    wait for (0 keeps the pure-network classic formula).
+
+    Overlapped (``overlap=True``): per stage the wavefront schedule
+    (core/overlap.py) pays ``max(wire, combine)`` plus pipeline fill/drain
+    instead of ``wire + combine`` — the combine of bucket k runs while
+    bucket k+1's payload is on the wire (see
+    ``overlap.overlapped_stage_seconds``).  With one bucket there is nothing
+    to overlap and both forms coincide.
     """
-    return stages * max(n_buckets, 1) * alpha + wire_bytes * beta
+    b = max(n_buckets, 1)
+    if not overlap or stages <= 0:
+        return stages * b * alpha + wire_bytes * (beta + gamma)
+    per_stage_wire = wire_bytes * beta / stages
+    per_stage_combine = wire_bytes * gamma / stages
+    return stages * pipeline.overlapped_stage_seconds(
+        per_stage_wire, per_stage_combine, b, alpha)
 
 
 def collective_time(n_bytes: float, P: int, S: int,
                     algorithm: str = "wagma", *, n_buckets: int = 1,
                     alpha: float = DEFAULT_ALPHA,
-                    beta: float = DEFAULT_BETA) -> float:
+                    beta: float = DEFAULT_BETA,
+                    gamma: float = 0.0,
+                    overlap: bool = False) -> float:
     """Alpha-beta wall time per step of one algorithm's collective."""
     wire = collective_bytes_per_device(n_bytes, P, S, algorithm)
     return alpha_beta_time(wire, collective_stages(P, S, algorithm),
-                           n_buckets=n_buckets, alpha=alpha, beta=beta)
+                           n_buckets=n_buckets, alpha=alpha, beta=beta,
+                           gamma=gamma, overlap=overlap)
 
 
 def wagma_step_time(n_bytes: float, P: int, S: int, *, tau: int,
                     n_buckets: int = 1, alpha: float = DEFAULT_ALPHA,
-                    beta: float = DEFAULT_BETA) -> float:
+                    beta: float = DEFAULT_BETA,
+                    gamma: float = 0.0,
+                    overlap: bool = False) -> float:
     """Tau-amortised WAGMA averaging seconds/step: (tau-1) group butterflies
     + one bandwidth-optimal ring-allreduce global sync, averaged.
+
+    ``gamma``/``overlap`` model the combine arithmetic of the *group
+    butterfly* (the path core/overlap.py restructures); the tau-periodic
+    ring allreduce keeps the classic alpha-beta form — its reduction happens
+    inside the collective and is already pipelined by the ring.
 
     Single source of the amortisation used by ``WagmaAverager`` and
     ``launch/costmodel.averaging_comm_cost``.
     """
     group = collective_time(n_bytes, P, S, "wagma", n_buckets=n_buckets,
-                            alpha=alpha, beta=beta)
+                            alpha=alpha, beta=beta, gamma=gamma,
+                            overlap=overlap)
     sync = collective_time(n_bytes, P, S, "ring_allreduce",
                            n_buckets=n_buckets, alpha=alpha, beta=beta)
     return ((tau - 1) * group + sync) / tau

@@ -31,8 +31,9 @@ class WagmaConfig:
     average_dtype: Optional[str] = "float32"   # accumulation dtype for averaging
     dynamic_groups: bool = True           # False -> fixed groups (paper ablation 2)
     fused: bool = True                    # bucketed flat-buffer averaging path
-    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES
+    bucket_bytes: Optional[int] = None    # None -> modeled-optimal budget
     use_pallas: Optional[bool] = None     # None -> Pallas combine when fused
+    overlap: bool = True                  # wavefront bucket pipeline (DESIGN §8)
 
 
 class WagmaAverager:
@@ -80,7 +81,8 @@ class WagmaAverager:
             axis_names=self.axis_names, axis_sizes=self.axis_sizes,
             average_dtype=dtype, fused=self.cfg.fused,
             bucket_bytes=self.cfg.bucket_bytes,
-            use_pallas=self.cfg.use_pallas)
+            use_pallas=self.cfg.use_pallas,
+            overlap=self.cfg.overlap, tau=self.cfg.tau)
 
     def sync(self, tree):
         """Synchronous global allreduce (Alg. 2 line 16)."""
@@ -101,13 +103,18 @@ class WagmaAverager:
 
     def comm_time_per_step(self, payload_bytes: int, *, n_buckets: int = 1,
                            alpha: float = group_allreduce.DEFAULT_ALPHA,
-                           beta: float = group_allreduce.DEFAULT_BETA) -> float:
+                           beta: float = group_allreduce.DEFAULT_BETA,
+                           gamma: float = 0.0,
+                           overlap: Optional[bool] = None) -> float:
         """Average per-device alpha-beta collective seconds/step.
 
         ``n_buckets`` is the launch count per stage: the bucketed fused path
         uses the layout's bucket count; pass the leaf count to model the
         per-leaf path (the bucketing win is this ratio in the alpha term).
+        ``gamma`` adds the per-stage combine cost; ``overlap`` (default: the
+        config's setting) hides it behind the wire per DESIGN.md §8.
         """
         return group_allreduce.wagma_step_time(
             payload_bytes, self.P, self.S, tau=self.cfg.tau,
-            n_buckets=n_buckets, alpha=alpha, beta=beta)
+            n_buckets=n_buckets, alpha=alpha, beta=beta, gamma=gamma,
+            overlap=self.cfg.overlap if overlap is None else overlap)

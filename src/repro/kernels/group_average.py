@@ -14,6 +14,12 @@ viewed as (rows, 128) lanes and the grid walks ``block_rows``-row tiles
 ~16 MiB VMEM budget with double buffering; f32 min tile is (8, 128)).
 Sub-lane sizes and non-divisible row counts are zero-padded once here — the
 bucketed caller never triggers that path because its buckets are pre-padded.
+
+``group_average_combine_multi`` is the overlapped-scheduler variant: a batch
+of independent bucket pairs (one wavefront tick of core/overlap.py) shares a
+single ``pallas_call`` whose grid walks buckets x row-tiles, so the next
+bucket's DMA overlaps the current bucket's compute instead of paying one
+kernel launch per bucket per stage.
 """
 
 from __future__ import annotations
@@ -33,15 +39,10 @@ def _combine_kernel(w_ref, r_ref, o_ref, *, inv_s: float):
     o_ref[...] = ((w + r) * inv_s).astype(o_ref.dtype)
 
 
-def group_average_combine(w, recv, inv_s: float, *, block_rows: int = 1024,
-                          interpret: bool = False):
-    """Fused (w + recv) * inv_s; w/recv any shape, same dtype."""
-    shape, dtype = w.shape, w.dtype
-    n = w.size
-    if n == 0:
-        return w
-    flat_w = w.reshape(-1)
-    flat_r = recv.reshape(-1)
+def _tiled_combine(flat_w, flat_r, inv_s: float, n: int, block_rows: int,
+                   interpret: bool):
+    """One pallas_call over the (rows, 128) view of a flat fp pair."""
+    dtype = flat_w.dtype
     rows = -(-n // _LANES)
     block_rows = min(block_rows, rows)
     rows_padded = -(-rows // block_rows) * block_rows
@@ -61,4 +62,65 @@ def group_average_combine(w, recv, inv_s: float, *, block_rows: int = 1024,
         out_shape=jax.ShapeDtypeStruct((rows_padded, _LANES), dtype),
         interpret=interpret,
     )(tw, tr)
-    return out.reshape(-1)[:n].reshape(shape)
+    return out.reshape(-1)
+
+
+def group_average_combine(w, recv, inv_s: float, *, block_rows: int = 1024,
+                          interpret: bool = False):
+    """Fused (w + recv) * inv_s; w/recv any shape, same dtype."""
+    shape = w.shape
+    n = w.size
+    if n == 0:
+        return w
+    out = _tiled_combine(w.reshape(-1), recv.reshape(-1), inv_s, n,
+                         block_rows, interpret)
+    return out[:n].reshape(shape)
+
+
+def group_average_combine_multi(ws, rs, inv_s: float, *,
+                                block_rows: int = 1024,
+                                interpret: bool = False):
+    """Combine a LIST of same-dtype flat bucket pairs in ONE pallas_call.
+
+    The overlapped bucket scheduler (core/overlap.py) lands several mutually
+    independent combines on the same wavefront tick; launching the
+    single-pair kernel once per bucket would pay one kernel dispatch each.
+    Instead the buckets' (rows, 128) tiles are laid out back to back in one
+    grid — emit_pipeline-style, the grid walks buckets x row-tiles, so while
+    tile t of bucket k computes, Pallas's automatic double buffering is
+    already DMA-ing tile t+1 (possibly the first tile of bucket k+1) into
+    VMEM: one launch, DMA of the next bucket overlapped with compute of the
+    current.
+
+    Buckets may be ragged (any sizes, incl. lane-unaligned); each is padded
+    to whole 128-lane rows so tiles never straddle two buckets' elements.
+    All pairs share one static ``inv_s`` — the scheduler batches per scale —
+    and one dtype (callers group by dtype; buckets are dtype-homogeneous).
+    """
+    if len(ws) != len(rs) or not ws:
+        raise ValueError("need matching, non-empty bucket lists")
+    dtype = ws[0].dtype
+    if any(w.dtype != dtype or r.dtype != dtype for w, r in zip(ws, rs)):
+        raise ValueError("multi-bucket combine needs one dtype per launch")
+    if len(ws) == 1:
+        return [group_average_combine(ws[0], rs[0], inv_s,
+                                      block_rows=block_rows,
+                                      interpret=interpret)]
+    sizes = [w.size for w in ws]
+    row_sizes = [-(-n // _LANES) * _LANES for n in sizes]
+
+    def cat(bufs):
+        parts = []
+        for buf, n, rn in zip(bufs, sizes, row_sizes):
+            flat = buf.reshape(-1)
+            parts.append(jnp.pad(flat, (0, rn - n)) if rn != n else flat)
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    total = sum(row_sizes)
+    flat = _tiled_combine(cat(ws), cat(rs), inv_s, total, block_rows,
+                          interpret)
+    outs, off = [], 0
+    for w, n, rn in zip(ws, sizes, row_sizes):
+        outs.append(jax.lax.slice(flat, (off,), (off + n,)).reshape(w.shape))
+        off += rn
+    return outs

@@ -12,6 +12,8 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.group_average import group_average_combine as _combine
+from repro.kernels.group_average import (group_average_combine_multi
+                                         as _combine_multi)
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 
@@ -32,6 +34,14 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
 def group_average_combine(w, recv, inv_s, *, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _combine(w, recv, float(inv_s), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("inv_s", "interpret"))
+def group_average_combine_multi(ws, rs, inv_s, *, interpret=None):
+    """One launch for a batch of independent bucket combines (overlap path)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _combine_multi(list(ws), list(rs), float(inv_s),
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -251,35 +251,68 @@ class CommReport:
     t_per_leaf: float             # seconds/step, one collective per leaf
     t_bucketed: float             # seconds/step, one collective per bucket
     speedup: float
+    # overlapped bucket pipeline (DESIGN.md §8): combine hidden behind wire
+    t_serial_gamma: float = 0.0   # serial-bucketed incl. combine (gamma term)
+    t_overlapped: float = 0.0     # seconds/step at the chosen budget
+    t_overlapped_same_budget: float = 0.0   # overlapped at the serial budget
+    overlap_speedup: float = 1.0  # t_serial_gamma / t_overlapped
+    chosen_bucket_bytes: int = 0  # argmin of the overlapped model
+    n_buckets_overlapped: int = 0  # launch count/stage at the chosen budget
 
 
 def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
                         n_model: int = 1, n_leaves: int, n_buckets: int = None,
                         dtype_bytes: int = 2,
+                        payload_bytes: float = None,
                         bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
                         alpha: float = group_allreduce.DEFAULT_ALPHA,
-                        beta: float = group_allreduce.DEFAULT_BETA
+                        beta: float = group_allreduce.DEFAULT_BETA,
+                        gamma: float = group_allreduce.DEFAULT_GAMMA
                         ) -> CommReport:
-    """Per-step averaging wall time: per-leaf vs bucketed collective launches.
+    """Per-step averaging wall time: per-leaf vs bucketed vs overlapped.
 
     The beta (bandwidth) term is identical — bucketing moves the same bytes —
-    so the whole win is the alpha term: ``log2(S) * n_launches * alpha``,
+    so the bucketing win is the alpha term: ``log2(S) * n_launches * alpha``,
     tau-amortised by ``group_allreduce.wagma_step_time`` (the same formula
-    ``WagmaAverager.comm_time_per_step`` reports).
+    ``WagmaAverager.comm_time_per_step`` reports).  The overlapped fields
+    add the ``gamma`` combine term and compare serial (``wire + combine``
+    per stage) against the wavefront pipeline (``max(wire, combine) +
+    fill``) at the budget ``bucketing.choose_bucket_bytes`` picks.
+
+    ``payload_bytes`` overrides the ``param_count``-estimated payload with
+    an exact figure (e.g. from ``jax.eval_shape`` on the real model), so
+    benchmarks and the cost model share one implementation of the
+    comparison.
     """
-    total, _ = param_count(cfg)
-    payload = total / n_model * dtype_bytes
+    if payload_bytes is None:
+        total, _ = param_count(cfg)
+        payload = total / n_model * dtype_bytes
+    else:
+        payload = float(payload_bytes)
     if n_buckets is None:
         n_buckets = max(1, -(-int(payload) // bucket_bytes))
 
-    def per_step(n_launch: int) -> float:
+    def per_step(n_launch: int, *, gamma_: float = 0.0,
+                 overlap: bool = False) -> float:
         return group_allreduce.wagma_step_time(
             payload, P, S, tau=tau, n_buckets=n_launch, alpha=alpha,
-            beta=beta)
+            beta=beta, gamma=gamma_, overlap=overlap)
 
     t_leaf, t_bucket = per_step(n_leaves), per_step(n_buckets)
+    chosen = bucketing.choose_bucket_bytes(int(payload), P=P, S=S, tau=tau,
+                                           alpha=alpha, beta=beta, gamma=gamma)
+    n_chosen = max(1, -(-int(payload) // chosen))
+    t_serial_g = per_step(n_buckets, gamma_=gamma)
+    t_overlap = per_step(n_chosen, gamma_=gamma, overlap=True)
     return CommReport(payload, n_leaves, n_buckets, t_leaf, t_bucket,
-                      t_leaf / t_bucket)
+                      t_leaf / t_bucket,
+                      t_serial_gamma=t_serial_g,
+                      t_overlapped=t_overlap,
+                      t_overlapped_same_budget=per_step(
+                          n_buckets, gamma_=gamma, overlap=True),
+                      overlap_speedup=t_serial_g / t_overlap,
+                      chosen_bucket_bytes=chosen,
+                      n_buckets_overlapped=n_chosen)
 
 
 def cost_for(cfg, shape, kind: str, *, n_dp: int, n_model: int, **kw):

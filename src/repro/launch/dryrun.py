@@ -12,7 +12,10 @@ For each pair this lowers the appropriate step:
     prefill_32k           -> prefill (forward + KV capture)
     decode_32k, long_500k -> serve_step (1 token vs seq_len cache)
 
-and records memory_analysis / cost_analysis / loop-aware collective bytes to
+and records memory_analysis / cost_analysis / loop-aware collective bytes —
+plus, for train steps, the bucket-layout-aware launch cross-check
+(expected ppermutes from the BucketLayout vs collective-permutes found in
+the compiled HLO) — to
 experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json.
 
 long_500k rules (DESIGN.md §5): native for xlstm/recurrentgemma/gemma3;
@@ -38,6 +41,55 @@ from repro import compat
 LONG_NATIVE = {"xlstm-350m", "recurrentgemma-2b", "gemma3-12b"}
 LONG_SKIP = {"whisper-medium"}
 SWA_WINDOW = 8192
+
+
+def bucket_collective_summary(averager, local_params, colls: dict) -> dict:
+    """Bucket-layout-aware launch accounting, cross-checked against HLO.
+
+    Computes the expected ``ppermute`` launch count of one averaging step
+    straight from the ``BucketLayout`` (one collective per bucket per
+    butterfly/gossip round — the invariant the bucketed path exists for;
+    the overlapped scheduler reorders launches but never adds any) and
+    compares it with the ``collective-permute`` count the loop-aware HLO
+    parser found in the compiled step.  ``match`` is exact on dp-only
+    meshes; with a model axis GSPMD may add its own permutes, so
+    ``extra_in_hlo`` reports the difference instead of failing.
+    """
+    from repro.core import bucketing, grouping
+    from repro.core import group_allreduce as ga
+
+    leaves = jax.tree_util.tree_leaves(local_params)
+    n_leaves = len(leaves)
+    name = getattr(averager, "name", "?")
+    cfg = getattr(averager, "cfg", None)
+    fused = cfg.fused if cfg is not None else getattr(averager, "fused", True)
+    if cfg is not None:     # wagma: resolve the modeled-optimal budget
+        bb = ga.resolve_bucket_bytes(local_params, cfg.bucket_bytes,
+                                     P=averager.P, S=averager.S,
+                                     tau=cfg.tau)
+    else:
+        bb = getattr(averager, "bucket_bytes", bucketing.DEFAULT_BUCKET_BYTES)
+    layout = bucketing.layout_for(local_params, max_bucket_bytes=bb)
+
+    rounds = {"wagma": grouping.ilog2(averager.S) if cfg is not None else 0,
+              "dpsgd": 2,
+              "sgp": getattr(averager, "neighbours", 1),
+              "adpsgd": 1}.get(name, 0)
+    units = layout.n_buckets if fused else n_leaves
+    expected = rounds * units
+    hlo_pp = int(colls.get("counts_by_kind", {}).get("collective-permute", 0))
+    return {
+        "averager": name,
+        "bucket_bytes": bb,
+        "n_leaves": n_leaves,
+        "n_buckets": layout.n_buckets,
+        "layout": layout.describe(),
+        "ppermutes_per_round_unit": rounds,
+        "expected_ppermutes": expected,
+        "hlo_ppermutes": hlo_pp,
+        "match": hlo_pp == expected,
+        "extra_in_hlo": hlo_pp - expected,
+    }
 
 
 def resolve_config(arch: str, shape_name: str):
@@ -71,6 +123,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
         cfg = cfg.variant(**cfg_overrides)
     shape = SHAPES[shape_name]
     model = build_model(cfg)
+    av = None
     t0 = time.time()
 
     with compat.set_mesh(mesh):
@@ -137,6 +190,12 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
     if average_dtype == "bfloat16":
         halve.append("collective-permute")   # butterfly payload is bf16
     colls = collective_summary(hlo, halve_kinds=tuple(halve))
+    bucket_colls = None
+    if av is not None:
+        local_params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), params_sds,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        bucket_colls = bucket_collective_summary(av, local_params, colls)
     n_dp = 1
     for a in mesh.axis_names:
         if a in ("pod", "data"):
@@ -167,6 +226,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
             "note": "scan bodies counted once by XLA; see analytic model",
         },
         "collectives": colls,
+        "bucket_collectives": bucket_colls,
         "analytic": {
             "flops_per_device": cm.flops_per_device,
             "hbm_bytes_per_device": cm.hbm_bytes_per_device,
@@ -238,8 +298,8 @@ def main():
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump([{k: r.get(k) for k in
                     ("tag", "status", "compile_s", "memory", "collectives",
-                     "analytic", "error")} for r in results], f, indent=2,
-                  default=str)
+                     "bucket_collectives", "analytic", "error")}
+                   for r in results], f, indent=2, default=str)
     return 0 if n_err == 0 else 1
 
 

@@ -9,10 +9,17 @@ tensor/expert parallelism inside each replica.
 The averager's collective runs the **bucketed fused path** by default
 (DESIGN.md §7): inside the manual region the params pytree is packed into a
 few dtype-homogeneous flat buckets (core/bucketing.py, layout cached across
-traces), each butterfly stage issues one ppermute per bucket instead of one
-per leaf, and the ``(w + recv) * 1/S`` combine streams through the fused
-Pallas kernel with fp32 accumulation.  Per-leaf behaviour is available via
-``WagmaConfig(fused=False)`` and is differentially tested to match.
+traces; budget picked by ``bucketing.choose_bucket_bytes`` unless pinned),
+each butterfly stage issues one ppermute per bucket instead of one per
+leaf, and the ``(w + recv) * 1/S`` combine streams through the fused Pallas
+kernel with fp32 accumulation.  Buckets are emitted in the **overlapped
+wavefront order** (DESIGN.md §8, ``WagmaConfig(overlap=True)`` default):
+bucket k+1's ppermute is issued before bucket k's combine and no stage
+barriers exist between buckets, so XLA's async collective-permute can hide
+the combine behind the wire; same-tick combines share one multi-bucket
+Pallas launch.  Per-leaf (``fused=False``) and serial-bucketed
+(``overlap=False``) behaviour remain available and are differentially
+tested to match bit-for-bit.
 
 Because model averaging needs **divergent per-replica weights**, params and
 optimiser state carry a leading dp-replica axis of size P_dp, sharded over

@@ -8,4 +8,20 @@ keeps ``import hypothesis_compat`` working under any invocation style
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clear_bucket_layout_cache():
+    """Keep ``bucketing._LAYOUT_CACHE`` from leaking across tests.
+
+    Layouts are keyed on tree structure and retain PyTreeDefs, so
+    parametrised mesh/model sweeps would otherwise accumulate entries for
+    the whole session; clearing per test also keeps cache-hit assertions
+    (tests/test_bucketing.py) independent of test order.
+    """
+    yield
+    from repro.core import bucketing
+    bucketing.clear_layout_cache()

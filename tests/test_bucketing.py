@@ -122,6 +122,41 @@ def test_all_empty_dtype_group():
     _assert_trees_equal(bucketing.unpack(buckets, layout), tree)
 
 
+def test_clear_layout_cache_drops_entries():
+    t1 = {"a": jnp.zeros((3, 4), jnp.float32)}
+    first = bucketing.layout_for(t1)
+    assert bucketing.layout_for(t1) is first
+    bucketing.clear_layout_cache()
+    assert not bucketing._LAYOUT_CACHE
+    again = bucketing.layout_for(t1)
+    assert again is not first                  # fresh object, same plan
+    assert again.bucket_sizes == first.bucket_sizes
+
+
+def test_tree_map_buckets_sees_whole_bucket_list():
+    tree = _tree_mixed()
+    layout = bucketing.layout_for(tree)
+    seen = {}
+
+    def fn(bufs):
+        seen["n"] = len(bufs)
+        seen["dtypes"] = [b.dtype for b in bufs if b.size]
+        return [b * 2.0 if b.size else b for b in bufs]
+
+    out = bucketing.tree_map_buckets(fn, tree, compute_dtype=jnp.float32)
+    assert seen["n"] == layout.n_buckets
+    assert all(d == jnp.float32 for d in seen["dtypes"])
+    np.testing.assert_allclose(np.asarray(out["emb"]),
+                               np.asarray(tree["emb"]) * 2.0, rtol=1e-6)
+    assert out["count"].dtype == jnp.int32     # cast back to storage dtype
+
+
+def test_tree_map_buckets_rejects_wrong_arity():
+    tree = _tree_mixed()
+    with pytest.raises(ValueError):
+        bucketing.tree_map_buckets(lambda bufs: bufs[:-1], tree)
+
+
 @pytest.mark.parametrize("compute_dtype", [jnp.float32, None])
 def test_tree_map_bucketed_identity_is_exact(compute_dtype):
     tree = _tree_mixed()

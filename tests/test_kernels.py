@@ -145,6 +145,68 @@ def test_group_average_combine_empty_and_nd_shapes():
                                rtol=1e-6)
 
 
+# -- group_average_combine_multi: one launch per wavefront tick -------------
+# The overlapped scheduler batches independent bucket combines into a single
+# pallas_call whose grid walks buckets x row-tiles; ragged (lane-unaligned)
+# bucket sizes exercise the per-bucket row padding.
+
+from repro.kernels.group_average import group_average_combine_multi
+
+RAGGED_BATCHES = [
+    [1],                          # single bucket delegates to the pair kernel
+    [1, 130, 128],                # unaligned / unaligned / aligned
+    [5, 127, 129, 1000, 37],      # many small ragged buckets
+    [8 * 128, 3, 4096 + 77],      # one multi-block + tiny + unaligned
+]
+
+
+@pytest.mark.cpu
+@pytest.mark.parametrize("sizes", RAGGED_BATCHES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_group_average_combine_multi_ragged(sizes, dtype):
+    rng = np.random.default_rng(sum(sizes))
+    ws = [jnp.asarray(rng.standard_normal(n), jnp.float32).astype(dtype)
+          for n in sizes]
+    rs = [jnp.asarray(rng.standard_normal(n), jnp.float32).astype(dtype)
+          for n in sizes]
+    outs = group_average_combine_multi(ws, rs, 0.25, block_rows=8,
+                                       interpret=True)
+    assert len(outs) == len(ws)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    for w, r, o in zip(ws, rs, outs):
+        assert o.shape == w.shape and o.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32),
+            np.asarray(ref.group_average_ref(w, r, 0.25), np.float32),
+            rtol=tol, atol=tol)
+
+
+@pytest.mark.cpu
+def test_group_average_combine_multi_matches_singles_bitwise():
+    # batching must not change the math: same kernel body, same fp32
+    # accumulate, so each bucket's result equals its solo-launch result
+    rng = np.random.default_rng(11)
+    sizes = [130, 999, 128]
+    ws = [jnp.asarray(rng.standard_normal(n), jnp.float32) for n in sizes]
+    rs = [jnp.asarray(rng.standard_normal(n), jnp.float32) for n in sizes]
+    batched = group_average_combine_multi(ws, rs, 0.5, block_rows=8,
+                                          interpret=True)
+    for w, r, got in zip(ws, rs, batched):
+        solo = raw_combine(w, r, 0.5, block_rows=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(solo))
+
+
+@pytest.mark.cpu
+def test_group_average_combine_multi_rejects_mixed_dtypes():
+    w32 = jnp.zeros((4,), jnp.float32)
+    w16 = jnp.zeros((4,), jnp.bfloat16)
+    with pytest.raises(ValueError):
+        group_average_combine_multi([w32, w16], [w32, w16], 0.5,
+                                    interpret=True)
+    with pytest.raises(ValueError):
+        group_average_combine_multi([], [], 0.5, interpret=True)
+
+
 RGLRU_CASES = [
     (3, 200, 96, True), (1, 17, 130, False), (8, 128, 128, True),
     (2, 300, 64, False),
