@@ -20,10 +20,18 @@ forced-host-device CPU mesh:
 Results land in ``BENCH_group_average.json`` at the repo root so the perf
 trajectory is machine-trackable PR over PR.
 
+A second modeled section covers the **hierarchical (2-link-class) topology**
+(DESIGN.md §9): intra-pod butterfly stages priced at ICI constants, inter-pod
+stages at DCN constants, each link class at its own
+``plan.choose_class_bucket_bytes`` budget — recorded next to the same
+topology forced onto one global 32 MiB budget and the flat-topology model.
+
 Usage:
     python benchmarks/bench_group_average.py [--layers 24] [--d 512]
     python benchmarks/bench_group_average.py --check      # model-only, fast;
-        exits non-zero unless overlapped < serial for transformer_wmt
+        exits non-zero unless overlapped < serial for transformer_wmt AND
+        the hierarchical per-class budgets beat the single global budget
+        with distinct per-class choices
 """
 
 import argparse
@@ -126,6 +134,50 @@ def modeled_transformer_wmt(*, P_cluster: int = 64, tau: int = 10) -> dict:
     }
 
 
+def modeled_hierarchical_wmt(*, P_cluster: int = 64, n_pods: int = 4,
+                             tau: int = 10) -> dict:
+    """Per-link-class model for the WMT transformer on a pod-aware topology.
+
+    Builds the 2-class (pod x data) topology — intra-pod butterfly bits ride
+    ICI, inter-pod bits ride DCN — and records the modeled step time three
+    ways: per-class budgets (``plan.choose_class_bucket_bytes`` argmin per
+    link class), the same topology forced onto one global 32 MiB budget
+    (pre-plan behaviour), and the flat single-class model for reference.
+    ``--check`` gates per-class <= single-budget: the per-class sweep must
+    never lose to the global default it replaces.
+    """
+    from repro.configs import get_config
+    from repro.core import plan as plan_mod
+    from repro.models.registry import build_model
+
+    cfg = get_config("transformer-wmt")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    payload = bucketing.tree_payload_bytes(shapes)
+    S = grouping.default_group_size(P_cluster)
+    n_data = P_cluster // n_pods
+    topo = plan_mod.Topology.hierarchical(("data", "pod"), (n_data, n_pods),
+                                          dcn_axes=("pod",))
+    hier = plan_mod.modeled_wagma_step_seconds(payload, topo, S, tau=tau)
+    single = plan_mod.modeled_wagma_step_seconds(
+        payload, topo, S, tau=tau,
+        bucket_bytes=bucketing.DEFAULT_BUCKET_BYTES)
+    flat = plan_mod.modeled_wagma_step_seconds(
+        payload, plan_mod.Topology.flat(("data", "pod"), (n_data, n_pods)),
+        S, tau=tau)
+    return {
+        "config": cfg.name,
+        "P": P_cluster, "S": S, "tau": tau, "n_pods": n_pods,
+        "payload_bytes": payload,
+        "topology": topo.describe(),
+        "per_class": hier["per_class"],
+        "per_class_budget_step_s": hier["step_s"],
+        "single_budget_step_s": single["step_s"],
+        "flat_topology_step_s": flat["step_s"],
+        "per_class_budget_win": single["step_s"] / hier["step_s"],
+    }
+
+
 def live_mesh_bench(args) -> dict:
     """Wall-clock + launch-count measurement on the 8-device CPU mesh."""
     n_dp, S = 8, args.S
@@ -190,7 +242,8 @@ def main():
     ap.add_argument("--out", default=OUT_JSON)
     args = ap.parse_args()
 
-    report = {"modeled_transformer_wmt": modeled_transformer_wmt()}
+    report = {"modeled_transformer_wmt": modeled_transformer_wmt(),
+              "modeled_hierarchical_wmt": modeled_hierarchical_wmt()}
     m = report["modeled_transformer_wmt"]
     print(f"[model] transformer_wmt @ P={m['P']} S={m['S']}: "
           f"serial {m['serial']['modeled_step_s'] * 1e3:.3f} ms/step "
@@ -199,6 +252,15 @@ def main():
           f"({m['overlapped']['n_buckets']} x "
           f"{m['chosen_bucket_bytes'] // 2**20}MiB buckets, "
           f"{m['overlap_win']:.3f}x)")
+    h = report["modeled_hierarchical_wmt"]
+    budgets = {k: f"{v['bucket_bytes'] // 2**20}MiB"
+               for k, v in h["per_class"].items()}
+    print(f"[model] hierarchical (pod x data) @ P={h['P']} "
+          f"pods={h['n_pods']}: per-class budgets {budgets} -> "
+          f"{h['per_class_budget_step_s'] * 1e3:.3f} ms/step vs single "
+          f"32MiB {h['single_budget_step_s'] * 1e3:.3f} ms/step "
+          f"({h['per_class_budget_win']:.4f}x), flat-topology ref "
+          f"{h['flat_topology_step_s'] * 1e3:.3f} ms/step")
 
     if not args.check:
         report["live_8dev_cpu"] = live_mesh_bench(args)
@@ -208,11 +270,20 @@ def main():
     print(f"wrote {args.out}")
 
     ok = (m["overlapped"]["modeled_step_s"] < m["serial"]["modeled_step_s"])
+    # hierarchical gate: per-class budgets must never lose to the single
+    # global budget on the same 2-class topology, and the per-class cost
+    # model must actually pick distinct budgets per link class
+    ok_hier = (h["per_class_budget_step_s"] <= h["single_budget_step_s"]
+               and len({v["bucket_bytes"] for v in h["per_class"].values()})
+               == len(h["per_class"]))
     if args.check:
         print("CHECK", "PASS" if ok else "FAIL",
               f"(overlapped {m['overlapped']['modeled_step_s']:.6e} "
               f"< serial {m['serial']['modeled_step_s']:.6e})")
-        return 0 if ok else 1
+        print("CHECK-HIER", "PASS" if ok_hier else "FAIL",
+              f"(per-class {h['per_class_budget_step_s']:.6e} <= single "
+              f"{h['single_budget_step_s']:.6e}, budgets {budgets})")
+        return 0 if (ok and ok_hier) else 1
     return 0
 
 

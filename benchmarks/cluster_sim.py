@@ -38,7 +38,8 @@ from repro.core.group_allreduce import (alpha_beta_time,
                                         collective_bytes_per_device,
                                         DEFAULT_ALPHA, DEFAULT_BETA,
                                         DEFAULT_GAMMA)
-from repro.core import grouping
+from repro.core import bucketing, grouping
+from repro.core import plan as plan_mod
 
 LINK_BW = 1.0 / DEFAULT_BETA   # bytes/s per node (Piz Daint-scale Aries)
 LATENCY = DEFAULT_ALPHA        # per collective launch
@@ -170,6 +171,53 @@ def bucketing_win(P: int = 64, *, model_bytes: float = 50e6,
     return {"per_leaf_steps_per_hour": leaf.steps_per_hour,
             "bucketed_steps_per_hour": bucketed.steps_per_hour,
             "speedup": bucketed.steps_per_hour / leaf.steps_per_hour}
+
+
+def hierarchical_comm_time(model_bytes: float, topology, S: int, *,
+                           tau: int = 10, overlap: bool = True,
+                           bucket_bytes=None) -> float:
+    """Per-step averaging seconds on a multi-link-class topology.
+
+    Delegates to the compiled-plan cost model
+    (``plan.modeled_wagma_step_seconds``): each butterfly stage pays its own
+    link class's alpha/beta/gamma at that class's bucket budget
+    (modeled-optimal per class unless ``bucket_bytes`` forces one global
+    budget), tau-amortised with the bottleneck-class ring sync.
+    """
+    return plan_mod.modeled_wagma_step_seconds(
+        int(model_bytes), topology, S, tau=tau, overlap=overlap,
+        bucket_bytes=bucket_bytes)["step_s"]
+
+
+def hierarchical_win(P: int = 64, *, model_bytes: float = 245e6, S=None,
+                     n_pods: int = 4, tau: int = 10) -> dict:
+    """Modeled win of per-link-class budgets on a pod-aware topology.
+
+    Builds the 2-class (pod x data) topology — intra-pod bits ride ICI,
+    inter-pod bits ride DCN — and compares the step time with each class at
+    its own ``choose_class_bucket_bytes`` argmin against the same topology
+    forced onto one global 32 MiB budget (the pre-plan behaviour), plus the
+    flat single-class model as the paper-scale reference.
+    """
+    S = S or grouping.default_group_size(P)
+    n_data = P // n_pods
+    topo = plan_mod.Topology.hierarchical(
+        ("data", "pod"), (n_data, n_pods), dcn_axes=("pod",))
+    flat = plan_mod.Topology.flat(("data", "pod"), (n_data, n_pods))
+    per_class = hierarchical_comm_time(model_bytes, topo, S, tau=tau)
+    single = hierarchical_comm_time(
+        model_bytes, topo, S, tau=tau,
+        bucket_bytes=bucketing.DEFAULT_BUCKET_BYTES)
+    flat_s = hierarchical_comm_time(model_bytes, flat, S, tau=tau)
+    budgets = {
+        name: ent["bucket_bytes"] for name, ent in
+        plan_mod.modeled_wagma_step_seconds(
+            int(model_bytes), topo, S, tau=tau)["per_class"].items()}
+    return {"per_class_budget_comm_s": per_class,
+            "single_budget_comm_s": single,
+            "flat_topology_comm_s": flat_s,
+            "class_budgets": budgets,
+            "speedup": single / per_class}
 
 
 def overlap_win(P: int = 64, *, model_bytes: float = 50e6, S=None,

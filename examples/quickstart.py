@@ -1,7 +1,15 @@
 """Quickstart: WAGMA-SGD on 8 (forced host) devices in ~a minute on CPU.
 
 Trains the reduced tinyllama config with wait-avoiding group model averaging
-(P_dp=4, S=2, tau=5) and compares the loss curve against Allreduce-SGD.
+(2 pods x 2-4 workers, S=2, tau=5) on a **pod-aware hierarchical topology**
+and compares the loss curve against Allreduce-SGD.
+
+This is the intended surface of the averaging subsystem (DESIGN.md §9): map
+the dp mesh axes onto link classes with a frozen ``Topology``, and let the
+averager compile the collective once into an ``AveragingPlan`` — per-stage
+ICI/DCN classification, one bucket budget per link class, wavefront
+schedule.  The old ``group_average(offset=..., fused=..., bucket_bytes=...)``
+kwarg pile is a deprecated shim over exactly this.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,6 +21,8 @@ import jax
 
 from repro import compat
 from repro.configs import get_config
+from repro.core.group_allreduce import dp_axis_layout
+from repro.core.plan import Topology
 from repro.launch.train import Trainer
 
 
@@ -21,17 +31,31 @@ def main():
     # shard_map, which crashes the XLA bundled with JAX 0.4.x — fall back to
     # pure data parallelism there (see compat.PARTIAL_AUTO_SCAN_OK).
     n_model = 2 if compat.PARTIAL_AUTO_SCAN_OK else 1
-    mesh = jax.make_mesh((4, n_model), ("data", "model"))
+    n_data = 8 // (2 * n_model)
+    mesh = jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
     cfg = get_config("tinyllama-1.1b", smoke=True)
 
-    print("== WAGMA-SGD (S=2, tau=5) ==")
+    # The topology is the compilation input: the 'data' axis rides intra-pod
+    # ICI, the 'pod' axis rides inter-pod DCN — low butterfly bits classify
+    # as ICI, high bits as DCN, each with its own bucket budget.
+    names, sizes = dp_axis_layout(mesh.axis_names, dict(mesh.shape),
+                                  ("pod", "data"))
+    topology = Topology.hierarchical(names, sizes, dcn_axes=("pod",))
+    print(f"topology: {topology.describe()}")
+
+    print("== WAGMA-SGD (S=2, tau=5, pod-aware plan) ==")
     wagma = Trainer(cfg, mesh, averager="wagma", group_size=2, tau=5,
-                    learning_rate=0.3, seq_len=64, global_batch=16)
+                    learning_rate=0.3, seq_len=64, global_batch=16,
+                    topology=topology)
+    # the plan the train step executes, compiled once per tree structure
+    local = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                         wagma.params)
+    print(wagma.averager.plan_for(local).describe())
     h1 = wagma.run(steps=30, log_every=10)
 
     print("== Allreduce-SGD baseline ==")
     sync = Trainer(cfg, mesh, averager="allreduce", learning_rate=0.3,
-                   seq_len=64, global_batch=16)
+                   seq_len=64, global_batch=16, topology=topology)
     h2 = sync.run(steps=30, log_every=10)
 
     print(f"\nWAGMA     first->last loss: {h1[0]:.3f} -> {h1[-1]:.3f}")

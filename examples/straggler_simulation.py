@@ -8,6 +8,12 @@ stall entirely), exactly the paper's injected-imbalance setting. Compares:
     local SGD with sync period tau (= WAGMA minus group avg)   [ablation 1]
     Allreduce-SGD (forced global barrier; stragglers block)    [baseline]
 
+The synchronisation collectives run through the compiled-plan surface
+(DESIGN.md §9): a ``Topology`` over the simulated worker axis is compiled
+once into an ``AveragingPlan`` whose stacked-simulator twins
+(``plan.average_stacked`` / ``plan.sync_stacked``) share the group math
+with the distributed path.
+
     PYTHONPATH=src python examples/straggler_simulation.py
 """
 
@@ -17,7 +23,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import staleness
-from repro.core.group_allreduce import global_average_stacked
+from repro.core.plan import AveragingConfig, Topology, compile_plan
 from repro.data import make_batch_fn
 from repro.configs.base import InputShape
 from repro.models.registry import build_model
@@ -36,6 +42,11 @@ def run(mode: str, seed: int = 0):
         lambda a: jnp.broadcast_to(a[None], (P,) + a.shape), params0)
     opt_states = jax.vmap(opt.init)(stacked)
     state = staleness.init_state(stacked)
+    # one compiled plan for the simulated worker axis; its stacked twins
+    # (average_stacked / sync_stacked) are the simulator's collectives
+    plan = compile_plan(
+        Topology.flat(("workers",), (P,)), params0,
+        AveragingConfig(group_size=S, tau=TAU))
     shape = InputShape("sim", 64, P * 4, "train")
     bf = make_batch_fn(cfg, shape, seed=seed)
     straggle = staleness.StragglerModel(P, n_stragglers=2, p_stall=0.3,
@@ -74,10 +85,10 @@ def run(mode: str, seed: int = 0):
         elif mode == "local_sgd":
             newp = do_update(state.models)
             if (t + 1) % TAU == 0:
-                newp = global_average_stacked(newp, P=P)
+                newp = plan.sync_stacked(newp)
             state = state._replace(models=newp)
         else:  # allreduce: global barrier every step (stragglers just wait)
-            newp = global_average_stacked(do_update(state.models), P=P)
+            newp = plan.sync_stacked(do_update(state.models))
             state = state._replace(models=newp)
         opt_holder["st"] = produced["opt"]
         losses.append(float(produced["loss"].mean()))

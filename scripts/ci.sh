@@ -27,4 +27,10 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
   fi
 fi
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Modeled-perf gate: overlapped < serial for transformer_wmt AND the
+# hierarchical (2-link-class pod x data) per-class bucket budgets beat the
+# single global budget (distinct per-class choices).  Writes the tracked
+# BENCH_group_average.json; model-only, a few seconds.
+python benchmarks/bench_group_average.py --check

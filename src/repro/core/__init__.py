@@ -8,12 +8,17 @@
 * overlap.py         — software-pipelined bucket scheduler: wavefront over
                        the (bucket, stage) grid so bucket k+1's ppermute is
                        on the wire while bucket k combines (DESIGN.md §8)
-* group_allreduce.py — butterfly group allreduce via shard_map+ppermute,
-                       bucketed fused path (Pallas combine, overlapped by
-                       default) + per-leaf reference path, stacked
-                       simulator, alpha-beta(-gamma) collective cost model
-* wagma.py           — Algorithm 2 (WAGMA-SGD) as a composable averager
-* baselines.py       — the paper's comparison set (Table I), same bucketing
+* plan.py            — THE averaging API (DESIGN.md §9): frozen Topology
+                       (mesh axes → link classes with own alpha/beta/gamma)
+                       compiled once per tree structure into an
+                       AveragingPlan — per-stage ICI/DCN classification,
+                       per-link-class bucket budgets, wavefront schedule;
+                       execution is plan.average/sync/mix inside shard_map
+* group_allreduce.py — deprecated kwarg shims onto compiled plans, the
+                       stacked simulator, and the single-class
+                       alpha-beta(-gamma) collective cost model
+* wagma.py           — Algorithm 2 (WAGMA-SGD) as a plan-holding averager
+* baselines.py       — the paper's comparison set (Table I), same plans
 * staleness.py       — wait-avoidance/straggler semantics simulator
 
 Group patterns are static per compiled step: the host loop dispatches one of
@@ -23,10 +28,14 @@ Group patterns are static per compiled step: the host loop dispatches one of
 from repro.core.grouping import (default_group_size, groups_for_iteration,
                                  mask_bits, n_phases, phase_offset,
                                  propagation_latency)
+from repro.core.plan import (AveragingConfig, AveragingPlan, LinkClass,
+                             Topology, compile_plan)
 from repro.core.wagma import WagmaAverager, WagmaConfig
 from repro.core.baselines import make_averager
 
 __all__ = [
+    "AveragingConfig", "AveragingPlan", "LinkClass", "Topology",
+    "compile_plan",
     "WagmaAverager", "WagmaConfig", "make_averager",
     "default_group_size", "groups_for_iteration", "mask_bits",
     "n_phases", "phase_offset", "propagation_latency",

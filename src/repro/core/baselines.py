@@ -10,19 +10,22 @@ Every averager exposes the same interface as ``WagmaAverager``:
     comm(tree, phase)     — per-step collective (inside shard_map, manual dp)
     sync(tree)            — global average (inside shard_map)
 
-Every collective runs on the bucketed flat-buffer path by default
-(``fused=True`` constructor kwarg; DESIGN.md §7): the tree is packed into a
-few dtype-homogeneous buckets (core/bucketing.py) so each gossip/psum mix
-launches one collective per bucket instead of one per leaf, with fp32
-accumulation per bucket.  ``fused=False`` restores the per-leaf reference
-path; the differential suite pins the two to agree.
+As of the plan redesign (DESIGN.md §9) every baseline **builds and holds a
+compiled** :class:`~repro.core.plan.AveragingPlan`: the constructor takes a
+:class:`~repro.core.plan.Topology` (default: flat single link class over the
+dp axes — the legacy behaviour) and each collective runs through
+``plan.mix(tree, issue, combine, bits=...)`` / ``plan.sync(tree)``.  The
+``bits`` are the global dp-rank XOR bits the mix touches, so the plan can
+pick the bucket budget from the link class the mix actually rides (a ring on
+the intra-pod axis buckets for ICI; a global psum for the DCN bottleneck).
 
-Mixes are expressed as an ``issue`` half (the collectives) and a ``combine``
-half (the local arithmetic) so the bucketed path can run the single-stage
-overlap pipeline (``overlap=True`` default, core/overlap.py): every bucket's
-collectives are issued before any bucket's combine runs, hiding the gossip
-arithmetic of bucket k behind the wire time of bucket k+1 — the same
-wavefront idea the WAGMA butterfly uses across its log2(S) stages.
+The legacy constructor kwargs (``fused``/``bucket_bytes``/``overlap``)
+survive as plan-config inputs: mixes are expressed as an ``issue`` half (the
+collectives) and a ``combine`` half (the local arithmetic) so the bucketed
+path can run the single-stage overlap pipeline (``overlap=True`` default,
+core/overlap.py) — every bucket's collectives are issued before any bucket's
+combine runs.  ``fused=False`` restores the per-leaf reference path; the
+differential suite pins all granularities to agree.
 
 Distributed semantics on a lock-step SPMD pod:
 
@@ -48,15 +51,14 @@ P x P doubly-stochastic gossip matrix (incl. the true SGP topology).
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bucketing, grouping
-from repro.core import overlap as pipeline
-from repro.core.group_allreduce import (butterfly_exchange, global_average)
+from repro.core import plan as plan_mod
+from repro.core.plan import butterfly_exchange
 
 
 class _AveragerBase:
@@ -66,13 +68,25 @@ class _AveragerBase:
     def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int],
                  fused: bool = True,
                  bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
-                 overlap: bool = True):
+                 overlap: bool = True,
+                 topology: Optional[plan_mod.Topology] = None):
         self.axis_names = tuple(dp_axis_names)
-        self.axis_sizes = tuple(dp_axis_sizes)
-        self.P = int(np.prod(dp_axis_sizes))
+        self.axis_sizes = tuple(int(s) for s in dp_axis_sizes)
+        if topology is None:
+            topology = plan_mod.Topology.flat(self.axis_names, self.axis_sizes)
+        if (topology.axis_names != self.axis_names
+                or topology.axis_sizes != self.axis_sizes):
+            raise ValueError(
+                f"topology axes {topology.axis_names}/{topology.axis_sizes} "
+                f"do not match dp axes {self.axis_names}/{self.axis_sizes}")
+        self.topology = topology
+        self.P = int(np.prod(self.axis_sizes))
         self.fused = fused
         self.bucket_bytes = bucket_bytes
         self.overlap = overlap
+        self._cfg = plan_mod.AveragingConfig(
+            average_dtype="float32", fused=fused, bucket_bytes=bucket_bytes,
+            overlap=overlap)
 
     def phase_for_step(self, t: int) -> int:
         return t % self.n_phases
@@ -80,37 +94,20 @@ class _AveragerBase:
     def sync_due(self, t: int) -> bool:
         return False
 
+    def plan_for(self, tree) -> plan_mod.AveragingPlan:
+        """The compiled plan for this tree structure (cached by compile)."""
+        return plan_mod.compile_plan(self.topology, tree, self._cfg)
+
     def comm(self, tree, phase: int):
         return tree
 
     def sync(self, tree):
-        return global_average(tree, self.axis_names, fused=self.fused,
-                              bucket_bytes=self.bucket_bytes)
+        return self.plan_for(tree).sync(tree)
 
-    def _mix_tree(self, tree, issue, combine):
-        """Apply a flat fp32 gossip mix per bucket (fused) or per leaf.
-
-        The mix is split into its collective half ``issue(buf) -> recv``
-        (shape-polymorphic — ppermute/psum are) and its arithmetic half
-        ``combine(buf, recv) -> buf``.  Per leaf and per serial bucket the
-        two halves compose back into the original mix, so all granularities
-        compute identical element math — the differential tests exploit that
-        to pin fused == per-leaf.  With ``overlap=True`` the fused path
-        issues every bucket's collectives before any bucket's combine
-        (core/overlap.py single-stage pipeline).
-        """
-        mix = lambda buf: combine(buf, issue(buf))
-        if not self.fused:
-            return jax.tree.map(
-                lambda w: mix(w.astype(jnp.float32)).astype(w.dtype), tree)
-        if not self.overlap:
-            return bucketing.tree_map_bucketed(
-                mix, tree, compute_dtype=jnp.float32,
-                max_bucket_bytes=self.bucket_bytes)
-        return bucketing.tree_map_buckets(
-            lambda bufs: pipeline.overlapped_mix(bufs, issue, combine),
-            tree, compute_dtype=jnp.float32,
-            max_bucket_bytes=self.bucket_bytes)
+    def _mix_tree(self, tree, issue, combine, bits=()):
+        """Run a (collective, arithmetic) mix pair through the plan."""
+        return self.plan_for(tree).mix(tree, issue, combine,
+                                       bits=tuple(bits))
 
 
 class AllreduceAverager(_AveragerBase):
@@ -121,7 +118,9 @@ class AllreduceAverager(_AveragerBase):
     def comm(self, tree, phase: int):
         # fp32 accumulation (also: XLA-CPU crashes on bf16 manual all-reduce);
         # bucketed: one pmean per bucket — the MG-WFBP merged-gradient layout.
-        # The reduction IS the collective, so combine is the identity.
+        # The reduction IS the collective, so combine is the identity; the
+        # global collective spans every dp bit -> bucket budget follows the
+        # topology's bottleneck link class.
         return self._mix_tree(
             tree, lambda g: jax.lax.pmean(g, self.axis_names),
             lambda g, r: r)
@@ -162,7 +161,8 @@ class DPSGDAverager(_AveragerBase):
             left, right = recv
             return (acc + left + right) / 3.0
 
-        return self._mix_tree(tree, issue, combine)
+        # the ring rides the minor axis only -> bit 0's link class
+        return self._mix_tree(tree, issue, combine, bits=(0,))
 
 
 class SGPAverager(_AveragerBase):
@@ -176,11 +176,13 @@ class SGPAverager(_AveragerBase):
         self.n_phases = grouping.ilog2(self.P)
 
     def comm(self, tree, phase: int):
+        lp = grouping.ilog2(self.P)
+        bits = tuple((phase + k) % lp for k in range(self.neighbours))
+
         def issue(acc):
             return tuple(
-                butterfly_exchange(acc, (phase + k) % grouping.ilog2(self.P),
-                                   self.axis_names, self.axis_sizes)
-                for k in range(self.neighbours))
+                butterfly_exchange(acc, b, self.axis_names, self.axis_sizes)
+                for b in bits)
 
         def combine(acc, recvs):
             total = acc
@@ -188,7 +190,7 @@ class SGPAverager(_AveragerBase):
                 total = total + r
             return total / (self.neighbours + 1.0)
 
-        return self._mix_tree(tree, issue, combine)
+        return self._mix_tree(tree, issue, combine, bits=bits)
 
 
 class ADPSGDAverager(_AveragerBase):
@@ -204,7 +206,8 @@ class ADPSGDAverager(_AveragerBase):
             tree,
             lambda acc: butterfly_exchange(acc, phase, self.axis_names,
                                            self.axis_sizes),
-            lambda acc, other: (acc + other) / 2.0)
+            lambda acc, other: (acc + other) / 2.0,
+            bits=(phase,))
 
 
 class EagerSGDAverager(AllreduceAverager):
@@ -216,8 +219,10 @@ def make_averager(name: str, dp_axis_names, dp_axis_sizes, **kw):
     from repro.core.wagma import WagmaAverager, WagmaConfig
     name = name.lower()
     if name == "wagma":
+        topology = kw.pop("topology", None)
         cfg = WagmaConfig(**kw) if kw else WagmaConfig()
-        return WagmaAverager(dp_axis_names, dp_axis_sizes, cfg)
+        return WagmaAverager(dp_axis_names, dp_axis_sizes, cfg,
+                             topology=topology)
     table = {
         "allreduce": AllreduceAverager,
         "local_sgd": LocalSGDAverager,

@@ -44,6 +44,7 @@ that minimises the modeled overlapped step time.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -125,6 +126,7 @@ def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
 
 
 _LAYOUT_CACHE: Dict[tuple, BucketLayout] = {}
+_LAYOUT_STATS = {"hits": 0, "misses": 0}
 
 
 def clear_layout_cache() -> None:
@@ -136,18 +138,40 @@ def clear_layout_cache() -> None:
     structure forever.  Test fixtures call this between cases.
     """
     _LAYOUT_CACHE.clear()
+    _LAYOUT_STATS["hits"] = _LAYOUT_STATS["misses"] = 0
+    choose_bucket_bytes.cache_clear()
+
+
+def layout_cache_stats() -> dict:
+    """Hit/miss counters for :func:`layout_for` (cache-reuse assertions).
+
+    The compiled-plan path (core/plan.py) traces one jitted step per phase
+    offset; the layout must be derived once per (structure, budget) and hit
+    thereafter — the offset is not part of the key because the layout does
+    not depend on it.
+    """
+    return dict(_LAYOUT_STATS)
 
 
 def layout_for(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
                ) -> BucketLayout:
-    """Cached :func:`build_layout` keyed on structure, not array identity."""
+    """Cached :func:`build_layout` keyed on structure, not array identity.
+
+    The key is exactly what the layout is a function of — treedef, per-leaf
+    (shape, dtype), and the byte budget.  Anything else a caller threads
+    around (phase offset, averaging dtype, overlap mode) must NOT enter the
+    key: re-tracing every phase variant of a step reuses one layout.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     key = (treedef, tuple((tuple(l.shape), np.dtype(l.dtype).str)
                           for l in leaves), max_bucket_bytes)
     layout = _LAYOUT_CACHE.get(key)
     if layout is None:
+        _LAYOUT_STATS["misses"] += 1
         layout = _LAYOUT_CACHE[key] = build_layout(
             tree, max_bucket_bytes=max_bucket_bytes)
+    else:
+        _LAYOUT_STATS["hits"] += 1
     return layout
 
 
@@ -240,14 +264,15 @@ def tree_payload_bytes(tree) -> int:
 BUCKET_BYTES_CANDIDATES = tuple((1 << i) * 1024 * 1024 for i in range(8))
 
 
+@lru_cache(maxsize=None)
 def choose_bucket_bytes(payload_bytes: int, *, P: int, S: int,
                         tau: int = 10,
                         overlap: bool = True,
                         alpha: float = None, beta: float = None,
                         gamma: float = None,
-                        candidates: Sequence[int] = BUCKET_BYTES_CANDIDATES
+                        candidates: Tuple[int, ...] = BUCKET_BYTES_CANDIDATES
                         ) -> int:
-    """Bucket budget minimising the modeled averaging step time.
+    """Bucket budget minimising the modeled (single-class) step time.
 
     Replaces the fixed 32 MiB default: sweeps ``candidates`` through the
     (overlapped) alpha-beta model — per-stage time
@@ -255,7 +280,10 @@ def choose_bucket_bytes(payload_bytes: int, *, P: int, S: int,
     argmin.  The tension the sweep resolves: fewer buckets amortise alpha,
     but the overlapped pipeline needs several buckets per model before the
     combine hides behind the wire at all.  Pure host-side arithmetic on
-    static quantities, so the choice is free at trace time.
+    static quantities, so the choice is free at trace time — and cached
+    (the sweep reruns only for new argument tuples, not once per
+    phase-offset trace).  The per-link-class variant lives in
+    ``plan.choose_class_bucket_bytes``.
     """
     from repro.core import group_allreduce as ga   # circular-import guard
     alpha = ga.DEFAULT_ALPHA if alpha is None else alpha

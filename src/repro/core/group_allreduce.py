@@ -1,58 +1,43 @@
-"""Wait-avoiding group allreduce — TPU-native realisation.
+"""Wait-avoiding group allreduce — legacy entry points + cost model.
 
 The paper implements group allreduce as activation messages + a butterfly
 (recursive-doubling) exchange inside each group, on MPI.  Under XLA the same
 exchange is ``log2(S)`` stages of ``jax.lax.ppermute`` with XOR-partner
 permutations, executed inside a ``shard_map`` (via ``repro.compat``) that is
 *manual* over the data-parallel mesh axes and *auto* (GSPMD) over the model
-axis.  Each stage combines the local shard with the partner's:
+axis.  The XOR bit decides which mesh axis carries the exchange: low bits
+permute within the ``data`` axis (intra-pod ICI), high bits within the
+``pod`` axis (inter-pod links) — the topology-awareness the paper gets from
+its butterfly.
 
-    for bit in mask_bits(P, S, t):  w = (w + ppermute(w, bit)) ;  w /= S
+**Execution moved to compiled plans (DESIGN.md §9).**  As of the
+``AveragingPlan`` redesign the single execution path for all averaging is
+``core/plan.py``: a frozen :class:`~repro.core.plan.Topology` (mesh axes →
+link classes with their own alpha/beta/gamma constants) is compiled once per
+tree structure into a plan that owns the per-stage link classification,
+per-link-class bucket budgets/layouts, and the wavefront schedule; averagers
+call ``plan.average(tree, phase)`` / ``plan.sync(tree)``.
 
-The XOR bit decides which mesh axis carries the exchange: low bits permute
-within the ``data`` axis (intra-pod ICI), high bits within the ``pod`` axis
-(inter-pod links) — the topology-awareness the paper gets from its butterfly.
+**Migration note.**  :func:`group_average` and :func:`global_average` below
+are *deprecated thin shims* kept so pre-plan call sites (and the
+differential test suite) keep working: they build a flat single-class
+topology from their kwargs and delegate to a cached compiled plan.  New
+code should do
 
-**Bucketed fused path (default).**  ``group_average(fused=True)`` packs the
-pytree into a few contiguous dtype-homogeneous flat buckets
-(``core/bucketing.py``) so each butterfly stage issues **one ppermute per
-bucket** instead of one per leaf — collective launch count drops from
-``n_leaves * log2(S)`` to ``n_buckets * log2(S)`` (the alpha term of
-:func:`collective_time`) — and the combine ``(w + recv) * 1/S`` runs through
-the fused Pallas kernel (``kernels/group_average.py``: fp32 accumulation,
-one HBM read per operand) instead of two unfused elementwise passes.
-``fused=False`` keeps the per-leaf reference path; the two are differentially
-tested against each other and the stacked simulator on every phase offset.
+    from repro.core import plan
+    topo = plan.Topology.flat(axis_names, axis_sizes)        # or .hierarchical
+    p = plan.compile_plan(topo, params, plan.AveragingConfig(group_size=S))
+    p.average(params, phase)                                  # in shard_map
 
-**Overlapped bucket pipeline (default on the fused path).**  With
-``overlap=True`` the buckets are no longer walked serially: the wavefront
-scheduler (``core/overlap.py``, DESIGN.md §8) issues bucket k+1's ppermute
-before bucket k's combine runs and lets each bucket advance to its next
-butterfly stage without barriering on the others, so combine time hides
-behind wire time (modeled by ``collective_time(overlap=True)``: per-stage
-``max(wire, combine) + fill`` instead of ``wire + combine``).  Same-tick
-combines share one multi-bucket Pallas launch.  Per-bucket stage order is
-unchanged — only inter-bucket interleaving — so ``overlap=True`` stays
-bit-compatible with the serial bucketed path and the per-leaf reference.
-``bucket_bytes=None`` (default) picks the budget that minimises the modeled
-overlapped step time (``bucketing.choose_bucket_bytes``) instead of the
-fixed 32 MiB.
-
-Because XLA permutations are static, functions here take a *static* phase
-offset; the training loop cycles through ``grouping.distinct_offsets`` and
-dispatches the matching compiled step (see train/train_step.py).
-
-Two more entry points ship alongside:
-
-* ``global_average``        — the tau-periodic synchronous allreduce (psum),
-  bucketed the same way when ``fused=True``.
-* ``group_average_stacked`` — single-process simulator on stacked (P, ...)
-  pytrees via the doubly-stochastic averaging matrix; shares the group math
-  with the distributed path and is used by tests and convergence benchmarks.
+What legitimately stays here: the minor-to-major dp-axis layout helper, the
+stacked single-process simulator (shared group math, used by tests and the
+convergence benchmarks), and the classic single-class alpha-beta(-gamma)
+collective cost model (the per-link-class model lives in ``plan``).
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -61,10 +46,13 @@ import numpy as np
 
 from repro.core import bucketing, grouping
 from repro.core import overlap as pipeline
+from repro.core import plan as plan_mod
+from repro.core.plan import (DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_GAMMA,
+                             butterfly_exchange)
 
 
 # ---------------------------------------------------------------------------
-# Distributed path (call inside shard_map; manual over dp axes)
+# dp-axis layout (shared by plans, averagers, and launchers)
 # ---------------------------------------------------------------------------
 
 def dp_axis_layout(mesh_axis_names: Sequence[str], mesh_shape: dict,
@@ -81,56 +69,34 @@ def dp_axis_layout(mesh_axis_names: Sequence[str], mesh_shape: dict,
     return names, sizes
 
 
-def _xor_perm(n: int, mask: int):
-    return [(i, i ^ mask) for i in range(n)]
+# ---------------------------------------------------------------------------
+# DEPRECATED kwarg shims — delegate to a compiled flat-topology plan
+# ---------------------------------------------------------------------------
 
-
-def butterfly_exchange(x: jax.Array, bit: int, axis_names: Sequence[str],
-                       axis_sizes: Sequence[int]) -> jax.Array:
-    """One butterfly stage: return the XOR-partner's value for global dp bit."""
-    ax, local_bit = grouping.split_bit_over_axes(bit, axis_sizes)
-    perm = _xor_perm(axis_sizes[ax], 1 << local_bit)
-    return jax.lax.ppermute(x, axis_names[ax], perm)
-
-
-def _stage_combine(acc, recv, scale: float, use_pallas: bool):
-    """(acc + recv) * scale — fused Pallas kernel or plain jnp."""
-    if use_pallas:
-        from repro.kernels import ops
-        return ops.group_average_combine(acc, recv, scale)
-    return (acc + recv) * jnp.asarray(scale, acc.dtype)
-
-
-def _combine_many(accs, recvs, scale: float, use_pallas: bool):
-    """Batch of independent (acc, recv) combines — one wavefront tick.
-
-    The Pallas route groups the batch by dtype and feeds each group to ONE
-    multi-bucket kernel launch (grid walks buckets x row-tiles); the jnp
-    route does the same per-pair arithmetic as :func:`_stage_combine`.
-    """
-    if not use_pallas:
-        return [(a + r) * jnp.asarray(scale, a.dtype)
-                for a, r in zip(accs, recvs)]
-    from repro.kernels import ops
-    outs = [None] * len(accs)
-    by_dtype = {}
-    for i, a in enumerate(accs):
-        by_dtype.setdefault(jnp.dtype(a.dtype), []).append(i)
-    for idxs in by_dtype.values():
-        res = ops.group_average_combine_multi([accs[i] for i in idxs],
-                                              [recvs[i] for i in idxs], scale)
-        for i, o in zip(idxs, res):
-            outs[i] = o
-    return outs
+def _shim_plan(tree, *, S: int, axis_names, axis_sizes, average_dtype,
+               fused: bool, bucket_bytes, use_pallas, overlap: bool,
+               tau: int) -> plan_mod.AveragingPlan:
+    topo = plan_mod.Topology.flat(tuple(axis_names), tuple(axis_sizes))
+    cfg = plan_mod.AveragingConfig(
+        group_size=S, tau=tau,
+        average_dtype=(None if average_dtype is None
+                       else np.dtype(average_dtype).name),
+        fused=fused, bucket_bytes=bucket_bytes, use_pallas=use_pallas,
+        overlap=overlap)
+    return plan_mod.compile_plan(topo, tree, cfg)
 
 
 def resolve_bucket_bytes(tree, bucket_bytes: Optional[int], *, P: int,
                          S: int, tau: int = 10) -> int:
-    """``None`` -> the modeled-optimal budget for this tree's payload."""
+    """DEPRECATED: ``None`` -> the modeled-optimal single-class budget.
+
+    Kept for pre-plan callers; plans resolve one budget *per link class*
+    at compile time (``plan.choose_class_bucket_bytes``).
+    """
     if bucket_bytes is not None:
         return bucket_bytes
-    return bucketing.choose_bucket_bytes(
-        bucketing.tree_payload_bytes(tree), P=P, S=S, tau=tau)
+    return plan_mod.choose_class_bucket_bytes(
+        bucketing.tree_payload_bytes(tree), plan_mod.DEFAULT_LINK)
 
 
 def group_average(tree, *, offset: int, P: int, S: int,
@@ -139,91 +105,55 @@ def group_average(tree, *, offset: int, P: int, S: int,
                   bucket_bytes: Optional[int] = None,
                   use_pallas: Optional[bool] = None,
                   overlap: bool = True, tau: int = 10):
-    """Group model averaging over groups of size S (paper Alg. 2 line 9+11).
+    """DEPRECATED shim: group model averaging via a compiled flat plan.
 
-    Must be called inside shard_map manual over ``axis_names``. Applies
-    log2(S) ppermute+add stages and divides by S; every worker ends with the
-    mean of the S models in its (dynamically selected) group.
+    Group averaging over groups of size S (paper Alg. 2 line 9+11); must be
+    called inside shard_map manual over ``axis_names``.  Every kwarg maps
+    onto :class:`plan.AveragingConfig` (``fused``/``use_pallas``/``overlap``/
+    ``bucket_bytes``/``average_dtype``/``tau``) over a single-link-class
+    :meth:`plan.Topology.flat`; the call delegates to
+    ``plan.average_offset(tree, offset)``.  All plan realisations order each
+    element's arithmetic identically — log2(S) adds then one scale — so
+    per-leaf, serial-bucketed, and overlapped paths agree bit-for-bit under
+    fp32 accumulation (pinned by tests on every phase offset).
 
-    ``fused=True`` (default) runs the bucketed flat-buffer path: one ppermute
-    per bucket per stage, combine through the fused Pallas kernel (fp32
-    accumulation; ``use_pallas=False`` forces the jnp combine, ``None`` means
-    "pallas when fused").  ``fused=False`` is the per-leaf reference path.
-    ``overlap=True`` (default) emits the fused path in the wavefront order of
-    ``core/overlap.py`` — bucket k+1's ppermute ahead of bucket k's combine,
-    no inter-bucket stage barrier, same-tick combines batched into one
-    multi-bucket Pallas launch; ``overlap=False`` walks buckets serially.
-    ``bucket_bytes=None`` picks the modeled-optimal budget
-    (``bucketing.choose_bucket_bytes``; ``tau`` only feeds that model — pass
-    the caller's sync period so the choice matches what analysis tools like
-    ``dryrun.bucket_collective_summary`` recompute).  All variants order
-    each element's
-    arithmetic identically — log2(S) adds then one scale — so they agree to
-    fp32-accumulation tolerance (bit-exact for fp32 accumulation dtypes).
+    Use :func:`plan.compile_plan` directly for new code — it exposes the
+    same knobs once, plus hierarchical (multi-link-class) topologies.
     """
-    bits = grouping.mask_bits_for_offset(P, S, offset)
-    inv_s = 1.0 / S
-
-    if not fused:
-        def avg_leaf(w):
-            orig_dtype = w.dtype
-            acc = w.astype(average_dtype) if average_dtype is not None else w
-            for bit in bits:
-                acc = acc + butterfly_exchange(acc, bit, axis_names, axis_sizes)
-            acc = acc * jnp.asarray(inv_s, acc.dtype)
-            return acc.astype(orig_dtype)
-
-        return jax.tree.map(avg_leaf, tree)
-
-    pallas = True if use_pallas is None else use_pallas
-    bb = resolve_bucket_bytes(tree, bucket_bytes, P=P, S=S, tau=tau)
-
-    if not overlap:
-        def mix(acc):
-            for i, bit in enumerate(bits):
-                recv = butterfly_exchange(acc, bit, axis_names, axis_sizes)
-                scale = inv_s if i == len(bits) - 1 else 1.0
-                acc = _stage_combine(acc, recv, scale, pallas)
-            return acc
-
-        return bucketing.tree_map_bucketed(mix, tree,
-                                           compute_dtype=average_dtype,
-                                           max_bucket_bytes=bb)
-
-    def mix_all(bufs):
-        return pipeline.overlapped_butterfly(
-            bufs, bits, inv_s,
-            exchange=lambda buf, bit: butterfly_exchange(
-                buf, bit, axis_names, axis_sizes),
-            combine_many=lambda accs, recvs, scale: _combine_many(
-                accs, recvs, scale, pallas))
-
-    return bucketing.tree_map_buckets(mix_all, tree,
-                                      compute_dtype=average_dtype,
-                                      max_bucket_bytes=bb)
+    warnings.warn(
+        "group_average(...) is deprecated; compile an AveragingPlan "
+        "(repro.core.plan.compile_plan) and call plan.average(tree, phase)",
+        DeprecationWarning, stacklevel=2)
+    p = _shim_plan(tree, S=S, axis_names=axis_names, axis_sizes=axis_sizes,
+                   average_dtype=average_dtype, fused=fused,
+                   bucket_bytes=bucket_bytes, use_pallas=use_pallas,
+                   overlap=overlap, tau=tau)
+    if p.P != P:
+        raise ValueError(f"P={P} does not match axis_sizes {axis_sizes}")
+    return p.average_offset(tree, offset)
 
 
 def global_average(tree, axis_names: Sequence[str], *, fused: bool = True,
-                   bucket_bytes: Optional[int] = None):
-    """tau-periodic synchronous allreduce mean over all dp replicas (line 16).
+                   bucket_bytes: Optional[int] = None,
+                   axis_sizes: Optional[Sequence[int]] = None):
+    """DEPRECATED shim: tau-periodic synchronous allreduce mean (line 16).
 
-    ``fused=True`` buckets the tree first: one pmean per bucket instead of
-    one per leaf (same payload bytes, log2(P)x fewer collective launches).
-    The reduction arithmetic lives *inside* the pmean, so there is no combine
-    to pipeline here; ``bucket_bytes=None`` keeps the default budget.
+    Delegates to ``plan.sync(tree)`` on a flat topology.  ``axis_sizes`` is
+    only needed to build the topology; legacy callers that omit it get a
+    size-agnostic stand-in (sync never permutes, so only the axis *names*
+    reach the collective).
     """
+    warnings.warn(
+        "global_average(...) is deprecated; compile an AveragingPlan and "
+        "call plan.sync(tree)", DeprecationWarning, stacklevel=2)
     names = tuple(axis_names)
-
-    if not fused:
-        def avg_leaf(w):
-            return jax.lax.pmean(w.astype(jnp.float32), names).astype(w.dtype)
-
-        return jax.tree.map(avg_leaf, tree)
-
-    return bucketing.tree_map_bucketed(
-        lambda buf: jax.lax.pmean(buf, names), tree,
-        compute_dtype=jnp.float32,
-        max_bucket_bytes=bucket_bytes or bucketing.DEFAULT_BUCKET_BYTES)
+    sizes = tuple(axis_sizes) if axis_sizes is not None \
+        else (1,) * len(names)
+    p = _shim_plan(tree, S=None, axis_names=names, axis_sizes=sizes,
+                   average_dtype="float32", fused=fused,
+                   bucket_bytes=bucket_bytes, use_pallas=None, overlap=True,
+                   tau=10)
+    return p.sync(tree)
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +186,7 @@ def global_average_stacked(stacked_tree, *, P: int):
 
 
 # ---------------------------------------------------------------------------
-# Analytical collective-cost model (used by benchmarks & roofline sanity)
+# Analytical collective-cost model (single link class; per-class in plan.py)
 # ---------------------------------------------------------------------------
 
 def collective_bytes_per_device(n_bytes: int, P: int, S: int,
@@ -292,17 +222,6 @@ def collective_stages(P: int, S: int, algorithm: str = "wagma") -> int:
     if algorithm == "gossip":
         return 2
     raise ValueError(algorithm)
-
-
-# Default network constants (Piz Daint-scale Aries; overridden by callers
-# with measured values). benchmarks/cluster_sim.py reuses these.
-DEFAULT_ALPHA = 20e-6          # seconds per collective launch
-DEFAULT_BETA = 1.0 / 10e9      # seconds per wire byte
-# Combine throughput: each butterfly stage streams the payload through the
-# fused kernel — 2 reads + 1 write at P100-scale HBM (~700 GB/s), so
-# seconds per *payload* byte per stage.  gamma << beta is exactly why the
-# combine can hide entirely behind the wire once the schedule overlaps them.
-DEFAULT_GAMMA = 3.0 / 700e9
 
 
 def alpha_beta_time(wire_bytes: float, stages: int, *, n_buckets: int = 1,
@@ -362,8 +281,8 @@ def wagma_step_time(n_bytes: float, P: int, S: int, *, tau: int,
     ring allreduce keeps the classic alpha-beta form — its reduction happens
     inside the collective and is already pipelined by the ring.
 
-    Single source of the amortisation used by ``WagmaAverager`` and
-    ``launch/costmodel.averaging_comm_cost``.
+    Single-link-class model; the per-class hierarchical composition is
+    ``plan.modeled_wagma_step_seconds``.
     """
     group = collective_time(n_bytes, P, S, "wagma", n_buckets=n_buckets,
                             alpha=alpha, beta=beta, gamma=gamma,

@@ -1,0 +1,694 @@
+"""Topology-aware compiled averaging plans (DESIGN.md §9).
+
+The paper's butterfly is topology-aware by construction: low XOR bits ride
+intra-pod links (ICI), high bits ride inter-pod links (DCN).  Before this
+module, that structure was implicit — every entry point took ~10 threaded
+kwargs (``offset/P/S/axis_names/axis_sizes/average_dtype/fused/bucket_bytes/
+use_pallas/overlap/tau``) with ONE bucket budget and ONE set of alpha/beta
+constants for all links.  This module makes the collective a compiled
+artifact instead:
+
+    topology = Topology.hierarchical(names, sizes, dcn_axes=("pod",))
+    plan     = compile_plan(topology, params, AveragingConfig(group_size=S))
+    ...inside shard_map (manual over the dp axes)...
+    new      = plan.average(params, phase)      # wait-avoiding group step
+    new      = plan.sync(params)                # tau-periodic global step
+
+``compile_plan`` runs once per (topology, config, tree structure) — cached —
+and precomputes everything the kwargs used to re-derive per call:
+
+* **stage classification** — which butterfly bit of which phase offset rides
+  which mesh axis, hence which :class:`LinkClass` (Layered-SGD's split of
+  the averaging hierarchy along the physical interconnect);
+* **per-link-class bucket budgets** — ``choose_class_bucket_bytes`` sweeps
+  the per-class alpha-beta-gamma pipeline model (MG-WFBP: bucket-merge
+  decisions against per-link cost constants, not a global 32 MiB default),
+  so ICI stages get their own budget and DCN stages theirs;
+* **per-class bucket layouts** and the wavefront schedule each stage run
+  executes under (core/overlap.py).
+
+Execution walks the offset's stages as maximal **runs** of equal link class:
+the tree is cast to the accumulation dtype once, packed into the run's
+class layout, butterflied in wavefront order, and repacked only at class
+boundaries.  Per element the arithmetic is unchanged — ``log2(S)`` adds in
+stage order, then one scale — so the plan path stays bit-identical to the
+per-leaf reference and the stacked simulator under fp32 accumulation, for
+any topology (pinned by tests/test_plan.py on every phase offset).
+
+Migration note: ``group_allreduce.group_average(...)`` and the ``fused=/
+bucket_bytes=/overlap=`` averager kwargs survive as deprecated shims that
+build a flat single-class topology and delegate here.  New code should
+construct a :class:`Topology` and hold the plan.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketing, grouping
+from repro.core import overlap as pipeline
+
+
+# ---------------------------------------------------------------------------
+# Link classes and topologies
+# ---------------------------------------------------------------------------
+
+# Default network constants (Piz Daint-scale Aries; the single-class legacy
+# model).  group_allreduce re-exports these names for its cost-model API.
+DEFAULT_ALPHA = 20e-6          # seconds per collective launch
+DEFAULT_BETA = 1.0 / 10e9      # seconds per wire byte
+# Combine throughput: 2 reads + 1 write at P100-scale HBM (~700 GB/s) —
+# seconds per *payload* byte per stage.  gamma << beta is why the combine
+# can hide entirely behind the wire once the schedule overlaps them.
+DEFAULT_GAMMA = 3.0 / 700e9
+
+
+@dataclass(frozen=True)
+class LinkClass:
+    """One class of physical link with its own cost constants.
+
+    ``alpha``  seconds per collective launch on this link class;
+    ``beta``   seconds per wire byte (inverse bandwidth);
+    ``gamma``  combine seconds per payload byte (HBM-side, link-independent
+               in principle but kept per class so calibration can differ);
+    ``bucket_bytes`` pins this class's bucket budget; ``None`` lets
+    :func:`choose_class_bucket_bytes` pick the modeled argmin.
+    """
+    name: str
+    alpha: float = DEFAULT_ALPHA
+    beta: float = DEFAULT_BETA
+    gamma: float = DEFAULT_GAMMA
+    bucket_bytes: Optional[int] = None
+
+
+# The flat single-class default reproduces the legacy (pre-plan) constants.
+DEFAULT_LINK = LinkClass("link")
+# Hierarchical defaults: intra-pod ICI (fast, cheap launches) vs inter-pod
+# DCN (slow, expensive launches).  Replace with measured constants
+# (ROADMAP: calibration) via LinkClass(...) when a real pod is available.
+ICI = LinkClass("ici", alpha=1e-6, beta=1.0 / 100e9)
+DCN = LinkClass("dcn", alpha=50e-6, beta=1.0 / 10e9)
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Frozen map from dp mesh axes (minor-to-major) to link classes.
+
+    ``axis_names``/``axis_sizes`` follow ``group_allreduce.dp_axis_layout``
+    order: minor-to-major, so global dp-rank bit b lives on the axis whose
+    cumulative log2 size spans b (``grouping.split_bit_over_axes``).
+    ``axis_class[i]`` indexes ``link_classes`` for axis i.
+    """
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    link_classes: Tuple[LinkClass, ...]
+    axis_class: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not (len(self.axis_names) == len(self.axis_sizes)
+                == len(self.axis_class)):
+            raise ValueError("axis_names/axis_sizes/axis_class length mismatch")
+        for s in self.axis_sizes:
+            grouping.ilog2(s)          # powers of two only
+        for c in self.axis_class:
+            if not 0 <= c < len(self.link_classes):
+                raise ValueError(f"axis_class index {c} out of range")
+
+    @classmethod
+    def flat(cls, axis_names: Sequence[str], axis_sizes: Sequence[int],
+             link: LinkClass = DEFAULT_LINK) -> "Topology":
+        """Single link class for every axis — the legacy behaviour."""
+        names = tuple(axis_names)
+        return cls(names, tuple(int(s) for s in axis_sizes), (link,),
+                   (0,) * len(names))
+
+    @classmethod
+    def hierarchical(cls, axis_names: Sequence[str],
+                     axis_sizes: Sequence[int], *,
+                     dcn_axes: Sequence[str] = ("pod",),
+                     ici: LinkClass = ICI,
+                     dcn: LinkClass = DCN) -> "Topology":
+        """Axes named in ``dcn_axes`` ride DCN; all others ride ICI."""
+        names = tuple(axis_names)
+        classes = tuple(1 if a in dcn_axes else 0 for a in names)
+        if 1 not in classes:
+            return cls.flat(names, axis_sizes, link=ici)
+        return cls(names, tuple(int(s) for s in axis_sizes), (ici, dcn),
+                   classes)
+
+    @property
+    def P(self) -> int:
+        p = 1
+        for s in self.axis_sizes:
+            p *= s
+        return p
+
+    def class_of_bit(self, bit: int) -> int:
+        ax, _ = grouping.split_bit_over_axes(bit, self.axis_sizes)
+        return self.axis_class[ax]
+
+    def link_of_bit(self, bit: int) -> LinkClass:
+        return self.link_classes[self.class_of_bit(bit)]
+
+    def axis_of_bit(self, bit: int) -> str:
+        ax, _ = grouping.split_bit_over_axes(bit, self.axis_sizes)
+        return self.axis_names[ax]
+
+    def bottleneck(self) -> LinkClass:
+        """The slowest-wire class — what a global collective is bound by."""
+        return max(self.link_classes, key=lambda l: l.beta)
+
+    def classes_in_use(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.axis_class)))
+
+    def describe(self) -> str:
+        parts = []
+        for i, link in enumerate(self.link_classes):
+            axes = [f"{n}={s}" for n, s, c in
+                    zip(self.axis_names, self.axis_sizes, self.axis_class)
+                    if c == i]
+            parts.append(f"{link.name}({', '.join(axes)}; "
+                         f"a={link.alpha:.1e} b={link.beta:.1e})")
+        return " | ".join(parts)
+
+
+def butterfly_exchange(x: jax.Array, bit: int, axis_names: Sequence[str],
+                       axis_sizes: Sequence[int]) -> jax.Array:
+    """One butterfly stage: return the XOR-partner's value for global dp bit."""
+    ax, local_bit = grouping.split_bit_over_axes(bit, axis_sizes)
+    n = axis_sizes[ax]
+    perm = [(i, i ^ (1 << local_bit)) for i in range(n)]
+    return jax.lax.ppermute(x, axis_names[ax], perm)
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AveragingConfig:
+    """Everything about the averaging math that is not the topology.
+
+    ``bucket_bytes`` is a *global override*: when set, every link class uses
+    it verbatim (the legacy single-budget behaviour).  ``None`` lets each
+    class pick its own modeled-optimal budget.  Exposed to legacy callers as
+    ``wagma.WagmaConfig`` (same class, aliased).
+    """
+    group_size: Optional[int] = None      # None -> sqrt(P) rounded to pow2
+    tau: int = 10                         # global sync period (paper §V-B)
+    average_dtype: Optional[str] = "float32"   # accumulation dtype
+    dynamic_groups: bool = True           # False -> fixed groups (ablation 2)
+    fused: bool = True                    # bucketed flat-buffer path
+    bucket_bytes: Optional[int] = None    # global budget override
+    use_pallas: Optional[bool] = None     # None -> Pallas combine when fused
+    overlap: bool = True                  # wavefront bucket pipeline (§8)
+
+
+# ---------------------------------------------------------------------------
+# Per-class cost model + budget choice
+# ---------------------------------------------------------------------------
+
+def class_stage_seconds(payload_bytes: float, link: LinkClass,
+                        n_buckets: int, *, overlap: bool = True) -> float:
+    """Modeled seconds for ONE butterfly stage on ``link`` with B buckets."""
+    wire = payload_bytes * link.beta
+    combine = payload_bytes * link.gamma
+    if overlap:
+        return pipeline.overlapped_stage_seconds(wire, combine, n_buckets,
+                                                 link.alpha)
+    return max(n_buckets, 1) * link.alpha + wire + combine
+
+
+@lru_cache(maxsize=None)
+def choose_class_bucket_bytes(
+        payload_bytes: int, link: LinkClass, *, overlap: bool = True,
+        candidates: Tuple[int, ...] = bucketing.BUCKET_BYTES_CANDIDATES
+        ) -> int:
+    """Bucket budget minimising THIS link class's modeled stage time.
+
+    The per-class replacement for the global ``bucketing.choose_bucket_bytes``
+    sweep: a cheap-launch high-bandwidth class (ICI) favours small buckets
+    (pipelining granularity), an expensive-launch class (DCN) favours big
+    ones (alpha amortisation) — MG-WFBP's merge criterion, per link.  The
+    stage count multiplies every candidate equally, so the argmin is
+    per-stage.  Cached: the sweep re-runs only for new (payload, link) pairs,
+    not per phase-offset trace.
+    """
+    if link.bucket_bytes is not None:
+        return link.bucket_bytes
+    payload = max(int(payload_bytes), 1)
+    best, best_t = None, None
+    for cand in candidates:
+        n_buckets = max(1, -(-payload // cand))
+        t = class_stage_seconds(payload, link, n_buckets, overlap=overlap)
+        if best_t is None or t < best_t:
+            best, best_t = cand, t
+    return best
+
+
+def ring_sync_seconds(payload_bytes: float, P: int, link: LinkClass,
+                      n_buckets: int) -> float:
+    """Classic alpha-beta ring allreduce on the bottleneck link class."""
+    wire = 2.0 * payload_bytes * (P - 1) / max(P, 1)
+    stages = 2 * (P - 1)
+    return stages * max(n_buckets, 1) * link.alpha + wire * link.beta
+
+
+def stage_class_counts(topology: Topology, S: int, offset: int
+                       ) -> Dict[int, int]:
+    """How many butterfly stages of this offset ride each link class."""
+    counts: Dict[int, int] = {}
+    for bit in grouping.mask_bits_for_offset(topology.P, S, offset):
+        c = topology.class_of_bit(bit)
+        counts[c] = counts.get(c, 0) + 1
+    return counts
+
+
+def modeled_wagma_step_seconds(payload_bytes: int, topology: Topology,
+                               S: int, *, tau: int = 10,
+                               overlap: bool = True,
+                               bucket_bytes: Optional[int] = None) -> dict:
+    """Tau-amortised hierarchical step model with per-class budgets.
+
+    Group term: mean over the distinct phase offsets of the sum over that
+    offset's stages of the stage's class cost (per-class budget, alpha,
+    beta, gamma — ``class_stage_seconds``).  Sync term: ring allreduce on
+    the bottleneck class.  ``bucket_bytes`` forces one global budget on
+    every class (the legacy behaviour the per-class sweep is gated
+    against in ``bench_group_average.py --check``).
+    """
+    P = topology.P
+    payload = max(int(payload_bytes), 1)
+    per_class = {}
+    for ci in topology.classes_in_use():
+        link = topology.link_classes[ci]
+        budget = bucket_bytes if bucket_bytes is not None else \
+            choose_class_bucket_bytes(payload, link, overlap=overlap)
+        n_buckets = max(1, -(-payload // budget))
+        per_class[ci] = {
+            "link": link.name,
+            "bucket_bytes": budget,
+            "n_buckets": n_buckets,
+            "stage_s": class_stage_seconds(payload, link, n_buckets,
+                                           overlap=overlap),
+            "alpha": link.alpha, "beta": link.beta, "gamma": link.gamma,
+        }
+    offsets = grouping.distinct_offsets(P, S)
+    group_times = []
+    for off in offsets:
+        t = 0.0
+        for ci, n in stage_class_counts(topology, S, off).items():
+            t += n * per_class[ci]["stage_s"]
+        group_times.append(t)
+    group_s = float(np.mean(group_times)) if group_times else 0.0
+    bn = topology.bottleneck()
+    sync_budget = bucket_bytes if bucket_bytes is not None \
+        else bucketing.DEFAULT_BUCKET_BYTES
+    sync_s = ring_sync_seconds(payload, P, bn,
+                               max(1, -(-payload // sync_budget)))
+    step_s = ((tau - 1) * group_s + sync_s) / max(tau, 1)
+    return {
+        "payload_bytes": payload, "P": P, "S": S, "tau": tau,
+        "overlap": overlap,
+        "group_s": group_s, "sync_s": sync_s, "step_s": step_s,
+        "per_class": {v["link"]: {k: v[k] for k in
+                                  ("bucket_bytes", "n_buckets", "stage_s",
+                                   "alpha", "beta", "gamma")}
+                      for v in per_class.values()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Combine kernels (moved from group_allreduce)
+# ---------------------------------------------------------------------------
+
+def _stage_combine(acc, recv, scale: float, use_pallas: bool):
+    """(acc + recv) * scale — fused Pallas kernel or plain jnp."""
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.group_average_combine(acc, recv, scale)
+    return (acc + recv) * jnp.asarray(scale, acc.dtype)
+
+
+def _combine_many(accs, recvs, scale: float, use_pallas: bool):
+    """Batch of independent (acc, recv) combines — one wavefront tick.
+
+    The Pallas route groups the batch by dtype and feeds each group to ONE
+    multi-bucket kernel launch (grid walks buckets x row-tiles); the jnp
+    route does the same per-pair arithmetic as :func:`_stage_combine`.
+    """
+    if not use_pallas:
+        return [(a + r) * jnp.asarray(scale, a.dtype)
+                for a, r in zip(accs, recvs)]
+    from repro.kernels import ops
+    outs = [None] * len(accs)
+    by_dtype = {}
+    for i, a in enumerate(accs):
+        by_dtype.setdefault(jnp.dtype(a.dtype), []).append(i)
+    for idxs in by_dtype.values():
+        res = ops.group_average_combine_multi([accs[i] for i in idxs],
+                                              [recvs[i] for i in idxs], scale)
+        for i, o in zip(idxs, res):
+            outs[i] = o
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# The compiled plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageRun:
+    """A maximal run of consecutive butterfly stages on one link class."""
+    class_index: int
+    bits: Tuple[int, ...]
+
+
+class AveragingPlan:
+    """Compiled realisation of group + global averaging on one topology.
+
+    Built by :func:`compile_plan`; holds the static schedule data (stage
+    classification, per-class budgets/layouts, wavefront order) and exposes
+    the execution entry points used inside shard_map:
+
+        plan.average(tree, phase)     group butterfly for a phase index
+        plan.sync(tree)               tau-periodic global allreduce mean
+        plan.mix(tree, issue, combine, bits=...)
+                                      single-round gossip/psum mixes
+                                      (the baseline averagers)
+
+    plus the stacked-simulator twins (``average_stacked``/``sync_stacked``)
+    and analysis/accounting helpers (``describe``, ``expected_ppermutes``,
+    ``per_class_expected``, ``modeled_step_seconds``).
+    """
+
+    def __init__(self, topology: Topology, cfg: AveragingConfig,
+                 storage_struct, work_struct, payload_bytes: int):
+        self.topology = topology
+        self.cfg = cfg
+        self.P = topology.P
+        self.S = cfg.group_size or grouping.default_group_size(self.P)
+        if self.S > self.P:
+            raise ValueError(f"group size {self.S} exceeds dp world {self.P}")
+        self.avg_dtype = (None if cfg.average_dtype is None
+                          else np.dtype(cfg.average_dtype))
+        if cfg.dynamic_groups:
+            self.offsets: Tuple[int, ...] = grouping.distinct_offsets(
+                self.P, self.S)
+        else:
+            self.offsets = (0,)
+        self.storage_struct = storage_struct    # SDS tree, storage dtypes
+        self.work_struct = work_struct          # SDS tree, accumulation dtype
+        self.payload_bytes = payload_bytes      # bytes of the work tree
+        # per-class budgets, resolved once at compile time
+        self.class_bucket_bytes: Dict[int, int] = {}
+        for ci in topology.classes_in_use():
+            link = topology.link_classes[ci]
+            if cfg.bucket_bytes is not None:
+                self.class_bucket_bytes[ci] = cfg.bucket_bytes
+            else:
+                self.class_bucket_bytes[ci] = choose_class_bucket_bytes(
+                    payload_bytes, link, overlap=cfg.overlap)
+        self.sync_bucket_bytes = (cfg.bucket_bytes
+                                  or bucketing.DEFAULT_BUCKET_BYTES)
+        self._runs: Dict[int, Tuple[StageRun, ...]] = {}
+
+    # -- static schedule ---------------------------------------------------
+    @property
+    def n_phases(self) -> int:
+        return len(self.offsets)
+
+    def runs_for_offset(self, offset: int) -> Tuple[StageRun, ...]:
+        """The offset's stages as maximal runs of equal link class."""
+        cached = self._runs.get(offset)
+        if cached is not None:
+            return cached
+        bits = grouping.mask_bits_for_offset(self.P, self.S, offset)
+        runs: List[StageRun] = []
+        for bit in bits:
+            ci = self.topology.class_of_bit(bit)
+            if runs and runs[-1].class_index == ci:
+                runs[-1] = StageRun(ci, runs[-1].bits + (bit,))
+            else:
+                runs.append(StageRun(ci, (bit,)))
+        self._runs[offset] = tuple(runs)
+        return self._runs[offset]
+
+    def class_layout(self, class_index: int) -> bucketing.BucketLayout:
+        """The (cached) bucket layout the class's stages pack into."""
+        return bucketing.layout_for(
+            self.work_struct,
+            max_bucket_bytes=self.class_bucket_bytes[class_index])
+
+    # -- execution: the paper's group butterfly ----------------------------
+    def average(self, tree, phase: int):
+        """Wait-avoiding group model averaging for compiled phase ``phase``."""
+        return self.average_offset(tree, self.offsets[phase])
+
+    def average_offset(self, tree, offset: int):
+        """Group averaging for an explicit phase offset (shim entry)."""
+        bits = grouping.mask_bits_for_offset(self.P, self.S, offset)
+        inv_s = 1.0 / self.S
+        exchange = lambda buf, bit: butterfly_exchange(
+            buf, bit, self.topology.axis_names, self.topology.axis_sizes)
+
+        if not self.cfg.fused:
+            def avg_leaf(w):
+                orig_dtype = w.dtype
+                acc = w.astype(self.avg_dtype) if self.avg_dtype is not None \
+                    else w
+                for bit in bits:
+                    acc = acc + exchange(acc, bit)
+                acc = acc * jnp.asarray(inv_s, acc.dtype)
+                return acc.astype(orig_dtype)
+
+            return jax.tree.map(avg_leaf, tree)
+
+        pallas = True if self.cfg.use_pallas is None else self.cfg.use_pallas
+        runs = self.runs_for_offset(offset)
+        # Cast once up front and keep the accumulation dtype across runs, so
+        # multi-class butterflies stay bit-identical to the per-leaf
+        # reference (no intermediate storage-dtype round trips).
+        if self.avg_dtype is not None:
+            work = jax.tree.map(lambda w: w.astype(self.avg_dtype), tree)
+        else:
+            work = tree
+        for ri, run in enumerate(runs):
+            scale = inv_s if ri == len(runs) - 1 else 1.0
+            budget = self.class_bucket_bytes[run.class_index]
+            if self.cfg.overlap:
+                def mix_all(bufs, run=run, scale=scale):
+                    return pipeline.overlapped_butterfly(
+                        bufs, run.bits, scale, exchange=exchange,
+                        combine_many=lambda a, r, s: _combine_many(
+                            a, r, s, pallas))
+                work = bucketing.tree_map_buckets(
+                    mix_all, work, compute_dtype=None,
+                    max_bucket_bytes=budget)
+            else:
+                def mix(acc, run=run, scale=scale):
+                    for i, bit in enumerate(run.bits):
+                        recv = exchange(acc, bit)
+                        s = scale if i == len(run.bits) - 1 else 1.0
+                        acc = _stage_combine(acc, recv, s, pallas)
+                    return acc
+                work = bucketing.tree_map_bucketed(
+                    mix, work, compute_dtype=None, max_bucket_bytes=budget)
+        if self.avg_dtype is None:
+            return work
+        return jax.tree.map(lambda w, o: w.astype(o.dtype), work, tree)
+
+    # -- execution: tau-periodic global sync -------------------------------
+    def sync(self, tree):
+        """Synchronous allreduce mean over all dp replicas (Alg. 2 line 16)."""
+        names = self.topology.axis_names
+        if not self.cfg.fused:
+            return jax.tree.map(
+                lambda w: jax.lax.pmean(w.astype(jnp.float32),
+                                        names).astype(w.dtype), tree)
+        return bucketing.tree_map_bucketed(
+            lambda buf: jax.lax.pmean(buf, names), tree,
+            compute_dtype=jnp.float32,
+            max_bucket_bytes=self.sync_bucket_bytes)
+
+    # -- execution: single-round gossip/psum mixes (baseline averagers) ----
+    def mix_bucket_bytes(self, bits: Tuple[int, ...] = ()) -> int:
+        """Budget for a single-round mix touching the given dp-rank bits.
+
+        The mix's collectives ride the classes of its bits (all classes for
+        a global collective, ``bits=()``); the budget follows the slowest
+        wire involved — the link the mix is bound by.
+        """
+        if self.cfg.bucket_bytes is not None:
+            return self.cfg.bucket_bytes
+        if bits:
+            classes = {self.topology.class_of_bit(b) for b in bits}
+            link = max((self.topology.link_classes[c] for c in classes),
+                       key=lambda l: l.beta)
+        else:
+            link = self.topology.bottleneck()
+        return choose_class_bucket_bytes(self.payload_bytes, link,
+                                         overlap=self.cfg.overlap)
+
+    def mix(self, tree, issue: Callable, combine: Callable, *,
+            bits: Tuple[int, ...] = ()):
+        """Apply a flat fp32 gossip/psum mix per bucket (fused) or per leaf.
+
+        ``issue(buf) -> recv`` is the collective half (shape-polymorphic),
+        ``combine(buf, recv) -> buf`` the local arithmetic; per leaf and per
+        serial bucket the halves compose back into the original mix, so all
+        granularities compute identical element math.  With ``overlap=True``
+        every bucket's collectives are issued before any bucket's combine
+        (core/overlap.py single-stage pipeline).
+        """
+        mixfn = lambda buf: combine(buf, issue(buf))
+        if not self.cfg.fused:
+            return jax.tree.map(
+                lambda w: mixfn(w.astype(jnp.float32)).astype(w.dtype), tree)
+        budget = self.mix_bucket_bytes(tuple(bits))
+        if not self.cfg.overlap:
+            return bucketing.tree_map_bucketed(
+                mixfn, tree, compute_dtype=jnp.float32,
+                max_bucket_bytes=budget)
+        return bucketing.tree_map_buckets(
+            lambda bufs: pipeline.overlapped_mix(bufs, issue, combine),
+            tree, compute_dtype=jnp.float32, max_bucket_bytes=budget)
+
+    # -- stacked-simulator twins (single process, leading replica axis) ----
+    def average_stacked(self, stacked_tree, *, t: int):
+        from repro.core import group_allreduce as ga
+        return ga.group_average_stacked(stacked_tree, P=self.P, S=self.S, t=t)
+
+    def sync_stacked(self, stacked_tree):
+        from repro.core import group_allreduce as ga
+        return ga.global_average_stacked(stacked_tree, P=self.P)
+
+    # -- accounting / analysis ---------------------------------------------
+    def n_leaves(self) -> int:
+        return len(jax.tree_util.tree_leaves(self.work_struct))
+
+    def butterfly_summary(self, offset: int = 0) -> List[dict]:
+        """One dict per stage run: link class, bits, budget, launch count."""
+        out = []
+        for run in self.runs_for_offset(offset):
+            link = self.topology.link_classes[run.class_index]
+            units = (self.class_layout(run.class_index).n_buckets
+                     if self.cfg.fused else self.n_leaves())
+            out.append({
+                "link": link.name,
+                "bits": run.bits,
+                "axes": tuple(self.topology.axis_of_bit(b) for b in run.bits),
+                "stages": len(run.bits),
+                "bucket_bytes": self.class_bucket_bytes[run.class_index],
+                "n_buckets": units,
+                "ppermutes": len(run.bits) * units,
+            })
+        return out
+
+    def per_class_expected(self, offset: int = 0) -> Dict[str, dict]:
+        """Expected ppermute launches per link class at one phase offset."""
+        agg: Dict[str, dict] = {}
+        for run in self.butterfly_summary(offset):
+            ent = agg.setdefault(run["link"], {
+                "stages": 0, "ppermutes": 0,
+                "bucket_bytes": run["bucket_bytes"],
+                "n_buckets": run["n_buckets"],
+                "axes": (),
+            })
+            ent["stages"] += run["stages"]
+            ent["ppermutes"] += run["ppermutes"]
+            ent["axes"] = tuple(dict.fromkeys(ent["axes"] + run["axes"]))
+        return agg
+
+    def expected_ppermutes(self, offset: int = 0) -> int:
+        return sum(r["ppermutes"] for r in self.butterfly_summary(offset))
+
+    def modeled_step_seconds(self, *, overlap: Optional[bool] = None) -> dict:
+        """Per-class alpha-beta-gamma model of this plan's step time."""
+        return modeled_wagma_step_seconds(
+            self.payload_bytes, self.topology, self.S, tau=self.cfg.tau,
+            overlap=self.cfg.overlap if overlap is None else overlap,
+            bucket_bytes=self.cfg.bucket_bytes)
+
+    def describe(self) -> str:
+        """Human-readable plan summary (stages, classes, budgets)."""
+        lines = [
+            f"AveragingPlan P={self.P} S={self.S} tau={self.cfg.tau} "
+            f"payload={self.payload_bytes / 2**20:.2f}MiB "
+            f"avg_dtype={self.avg_dtype} fused={self.cfg.fused} "
+            f"overlap={self.cfg.overlap}",
+            f"  topology: {self.topology.describe()}",
+        ]
+        for ci in self.topology.classes_in_use():
+            link = self.topology.link_classes[ci]
+            bb = self.class_bucket_bytes[ci]
+            nb = self.class_layout(ci).n_buckets if self.cfg.fused else 0
+            lines.append(f"  class {link.name}: budget "
+                         f"{bb / 2**20:.0f}MiB -> {nb} buckets")
+        for ph, off in enumerate(self.offsets):
+            runs = ", ".join(
+                f"{r['link']}[bits={list(r['bits'])} x{r['n_buckets']}buk]"
+                for r in self.butterfly_summary(off))
+            lines.append(f"  phase {ph} (offset {off}): {runs}")
+        lines.append(f"  sync: pmean budget "
+                     f"{self.sync_bucket_bytes / 2**20:.0f}MiB")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Compilation (cached on topology x config x tree structure)
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[tuple, AveragingPlan] = {}
+
+
+def clear_plan_cache() -> None:
+    """Drop compiled plans (and the treedefs they retain) — test hygiene."""
+    _PLAN_CACHE.clear()
+    choose_class_bucket_bytes.cache_clear()
+
+
+def _structure_key(tree) -> tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple((tuple(l.shape), np.dtype(l.dtype).str)
+                           for l in leaves))
+
+
+def _config_key(cfg: AveragingConfig) -> tuple:
+    avg = None if cfg.average_dtype is None \
+        else np.dtype(cfg.average_dtype).name
+    return (cfg.group_size, cfg.tau, avg, cfg.dynamic_groups, cfg.fused,
+            cfg.bucket_bytes, cfg.use_pallas, cfg.overlap)
+
+
+def compile_plan(topology: Topology, tree_shapes,
+                 config: AveragingConfig = AveragingConfig()
+                 ) -> AveragingPlan:
+    """Compile the collective once for a tree structure on a topology.
+
+    ``tree_shapes`` may be concrete arrays, tracers, or ShapeDtypeStructs —
+    only structure/shapes/dtypes are read.  Cached on (topology, config,
+    structure): repeated calls from every compiled phase variant return the
+    same plan object, and only the first call derives budgets/layouts.
+    """
+    key = (topology, _config_key(config), _structure_key(tree_shapes))
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        return plan
+    storage = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree_shapes)
+    avg = None if config.average_dtype is None \
+        else np.dtype(config.average_dtype)
+    work = storage if avg is None else jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, avg), storage)
+    payload = bucketing.tree_payload_bytes(work)
+    plan = AveragingPlan(topology, config, storage, work, payload)
+    _PLAN_CACHE[key] = plan
+    return plan

@@ -5,35 +5,37 @@ The training step (train/train_step.py) is, per data-parallel replica:
     G     = grad(loss)(W, local_batch)          # local gradients, NO dp psum
     W'    = W + U(G)                            # local optimiser step
     if (t+1) % tau != 0:
-        W <- group_average(W', groups(t))       # wait-avoiding group allreduce
+        W <- plan.average(W', phase(t))         # wait-avoiding group allreduce
     else:
-        W <- global_average(W')                 # synchronous allreduce (line 16)
+        W <- plan.sync(W')                      # synchronous allreduce (line 16)
 
 The dynamic group pattern of iteration t is static per compiled step variant
 (XLA collectives need static permutations); ``WagmaAverager`` exposes
 ``n_phases`` variants and the host loop picks ``phase_for_step(t)``.
+
+As of the plan redesign (DESIGN.md §9) the averager is a thin host-side
+wrapper around a compiled :class:`~repro.core.plan.AveragingPlan`: it owns
+the phase/sync bookkeeping, and delegates every collective to the plan the
+:class:`~repro.core.plan.Topology` compiles to for the current tree
+structure.  Pass ``topology=Topology.hierarchical(...)`` for pod-aware
+ICI/DCN grouping with per-link-class bucket budgets; the default flat
+topology reproduces the legacy single-budget behaviour.
+
+``WagmaConfig`` is an alias of :class:`plan.AveragingConfig` — the old
+kwarg names (``fused``/``bucket_bytes``/``use_pallas``/``overlap``) are
+now plan-compilation inputs rather than per-call arguments.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
-import jax.numpy as jnp
+from repro.core import group_allreduce, grouping
+from repro.core import plan as plan_mod
 
-from repro.core import bucketing, group_allreduce, grouping
-
-
-@dataclass(frozen=True)
-class WagmaConfig:
-    group_size: Optional[int] = None      # None -> sqrt(P) rounded to pow2 (paper)
-    tau: int = 10                         # global sync period (paper §V-B)
-    average_dtype: Optional[str] = "float32"   # accumulation dtype for averaging
-    dynamic_groups: bool = True           # False -> fixed groups (paper ablation 2)
-    fused: bool = True                    # bucketed flat-buffer averaging path
-    bucket_bytes: Optional[int] = None    # None -> modeled-optimal budget
-    use_pallas: Optional[bool] = None     # None -> Pallas combine when fused
-    overlap: bool = True                  # wavefront bucket pipeline (DESIGN §8)
+# Backwards-compatible alias: WagmaConfig(group_size=..., tau=..., fused=...)
+# is the plan's compilation config.
+WagmaConfig = plan_mod.AveragingConfig
 
 
 class WagmaAverager:
@@ -43,19 +45,26 @@ class WagmaAverager:
     grad_comm = False   # averages *models*, not gradients
 
     def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int],
-                 cfg: WagmaConfig = WagmaConfig()):
+                 cfg: WagmaConfig = WagmaConfig(),
+                 topology: Optional[plan_mod.Topology] = None):
         # minor-to-major layout (see group_allreduce.dp_axis_layout)
         self.axis_names = tuple(dp_axis_names)
-        self.axis_sizes = tuple(dp_axis_sizes)
-        self.P = 1
-        for s in self.axis_sizes:
-            self.P *= s
+        self.axis_sizes = tuple(int(s) for s in dp_axis_sizes)
+        if topology is None:
+            topology = plan_mod.Topology.flat(self.axis_names, self.axis_sizes)
+        if (topology.axis_names != self.axis_names
+                or topology.axis_sizes != self.axis_sizes):
+            raise ValueError(
+                f"topology axes {topology.axis_names}/{topology.axis_sizes} "
+                f"do not match dp axes {self.axis_names}/{self.axis_sizes}")
+        self.topology = topology
+        self.P = topology.P
         self.S = cfg.group_size or grouping.default_group_size(self.P)
         if self.S > self.P:
             raise ValueError(f"group size {self.S} exceeds dp world {self.P}")
         self.cfg = cfg
         if cfg.dynamic_groups:
-            self.offsets: Tuple[int, ...] = grouping.distinct_offsets(self.P, self.S)
+            self.offsets = grouping.distinct_offsets(self.P, self.S)
         else:
             self.offsets = (0,)   # ablation 2: fixed groups
 
@@ -72,23 +81,19 @@ class WagmaAverager:
     def sync_due(self, t: int) -> bool:
         return (t + 1) % self.cfg.tau == 0
 
+    # -- the compiled plan --------------------------------------------------
+    def plan_for(self, tree) -> plan_mod.AveragingPlan:
+        """The compiled plan for this tree structure (cached by compile)."""
+        return plan_mod.compile_plan(self.topology, tree, self.cfg)
+
     # -- collective bodies (call inside shard_map, manual over dp axes) ---
     def comm(self, tree, phase: int):
         """Wait-avoiding group model averaging (Alg. 2 line 9 + 11)."""
-        dtype = jnp.dtype(self.cfg.average_dtype) if self.cfg.average_dtype else None
-        return group_allreduce.group_average(
-            tree, offset=self.offsets[phase], P=self.P, S=self.S,
-            axis_names=self.axis_names, axis_sizes=self.axis_sizes,
-            average_dtype=dtype, fused=self.cfg.fused,
-            bucket_bytes=self.cfg.bucket_bytes,
-            use_pallas=self.cfg.use_pallas,
-            overlap=self.cfg.overlap, tau=self.cfg.tau)
+        return self.plan_for(tree).average(tree, phase)
 
     def sync(self, tree):
         """Synchronous global allreduce (Alg. 2 line 16)."""
-        return group_allreduce.global_average(
-            tree, self.axis_names, fused=self.cfg.fused,
-            bucket_bytes=self.cfg.bucket_bytes)
+        return self.plan_for(tree).sync(tree)
 
     # -- analysis ----------------------------------------------------------
     def comm_bytes_per_step(self, payload_bytes: int) -> float:
@@ -108,11 +113,9 @@ class WagmaAverager:
                            overlap: Optional[bool] = None) -> float:
         """Average per-device alpha-beta collective seconds/step.
 
-        ``n_buckets`` is the launch count per stage: the bucketed fused path
-        uses the layout's bucket count; pass the leaf count to model the
-        per-leaf path (the bucketing win is this ratio in the alpha term).
-        ``gamma`` adds the per-stage combine cost; ``overlap`` (default: the
-        config's setting) hides it behind the wire per DESIGN.md §8.
+        Single-link-class model (legacy); for the hierarchical per-class
+        composition use ``plan_for(tree).modeled_step_seconds()`` or
+        ``plan.modeled_wagma_step_seconds`` with this averager's topology.
         """
         return group_allreduce.wagma_step_time(
             payload_bytes, self.P, self.S, tau=self.cfg.tau,

@@ -22,6 +22,7 @@ from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, InputShape
 from repro.core import bucketing, group_allreduce
+from repro.core import plan as plan_mod
 
 
 @dataclass
@@ -258,6 +259,11 @@ class CommReport:
     overlap_speedup: float = 1.0  # t_serial_gamma / t_overlapped
     chosen_bucket_bytes: int = 0  # argmin of the overlapped model
     n_buckets_overlapped: int = 0  # launch count/stage at the chosen budget
+    # hierarchical topology (DESIGN.md §9): per-link-class alpha-beta terms
+    per_class: dict = None        # link name -> budget/buckets/stage seconds
+    t_hierarchical: float = 0.0   # per-class budgets, per-class constants
+    t_hierarchical_flat_budget: float = 0.0  # same topology, one 32MiB budget
+    hierarchical_budget_win: float = 1.0     # flat_budget / per-class
 
 
 def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
@@ -267,8 +273,8 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
                         bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
                         alpha: float = group_allreduce.DEFAULT_ALPHA,
                         beta: float = group_allreduce.DEFAULT_BETA,
-                        gamma: float = group_allreduce.DEFAULT_GAMMA
-                        ) -> CommReport:
+                        gamma: float = group_allreduce.DEFAULT_GAMMA,
+                        topology=None) -> CommReport:
     """Per-step averaging wall time: per-leaf vs bucketed vs overlapped.
 
     The beta (bandwidth) term is identical — bucketing moves the same bytes —
@@ -278,6 +284,12 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
     add the ``gamma`` combine term and compare serial (``wire + combine``
     per stage) against the wavefront pipeline (``max(wire, combine) +
     fill``) at the budget ``bucketing.choose_bucket_bytes`` picks.
+
+    ``topology`` (a :class:`repro.core.plan.Topology`) adds the
+    hierarchical fields: per-link-class stage terms with each class's own
+    alpha/beta/gamma and modeled-optimal budget
+    (``plan.modeled_wagma_step_seconds``), compared against forcing one
+    global 32 MiB budget on the same topology.
 
     ``payload_bytes`` overrides the ``param_count``-estimated payload with
     an exact figure (e.g. from ``jax.eval_shape`` on the real model), so
@@ -304,15 +316,27 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
     n_chosen = max(1, -(-int(payload) // chosen))
     t_serial_g = per_step(n_buckets, gamma_=gamma)
     t_overlap = per_step(n_chosen, gamma_=gamma, overlap=True)
-    return CommReport(payload, n_leaves, n_buckets, t_leaf, t_bucket,
-                      t_leaf / t_bucket,
-                      t_serial_gamma=t_serial_g,
-                      t_overlapped=t_overlap,
-                      t_overlapped_same_budget=per_step(
-                          n_buckets, gamma_=gamma, overlap=True),
-                      overlap_speedup=t_serial_g / t_overlap,
-                      chosen_bucket_bytes=chosen,
-                      n_buckets_overlapped=n_chosen)
+    rep = CommReport(payload, n_leaves, n_buckets, t_leaf, t_bucket,
+                     t_leaf / t_bucket,
+                     t_serial_gamma=t_serial_g,
+                     t_overlapped=t_overlap,
+                     t_overlapped_same_budget=per_step(
+                         n_buckets, gamma_=gamma, overlap=True),
+                     overlap_speedup=t_serial_g / t_overlap,
+                     chosen_bucket_bytes=chosen,
+                     n_buckets_overlapped=n_chosen)
+    if topology is not None:
+        hier = plan_mod.modeled_wagma_step_seconds(
+            int(payload), topology, S, tau=tau, overlap=True)
+        flat_budget = plan_mod.modeled_wagma_step_seconds(
+            int(payload), topology, S, tau=tau, overlap=True,
+            bucket_bytes=bucket_bytes)
+        rep.per_class = hier["per_class"]
+        rep.t_hierarchical = hier["step_s"]
+        rep.t_hierarchical_flat_budget = flat_budget["step_s"]
+        rep.hierarchical_budget_win = (flat_budget["step_s"]
+                                       / max(hier["step_s"], 1e-30))
+    return rep
 
 
 def cost_for(cfg, shape, kind: str, *, n_dp: int, n_model: int, **kw):

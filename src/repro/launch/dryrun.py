@@ -13,10 +13,12 @@ For each pair this lowers the appropriate step:
     decode_32k, long_500k -> serve_step (1 token vs seq_len cache)
 
 and records memory_analysis / cost_analysis / loop-aware collective bytes —
-plus, for train steps, the bucket-layout-aware launch cross-check
-(expected ppermutes from the BucketLayout vs collective-permutes found in
-the compiled HLO) — to
-experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json.
+plus, for train steps, the compiled-plan launch cross-check (expected
+ppermutes per link class from the AveragingPlan vs collective-permutes
+found in the compiled HLO, classified per mesh axis) and the plan's
+human-readable summary (stages, link class, bucket count, budget per
+class) — to experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json.
+``--hierarchical`` compiles the pod-aware 2-link-class topology.
 
 long_500k rules (DESIGN.md §5): native for xlstm/recurrentgemma/gemma3;
 explicit `swa` sliding-window variant for the pure full-attention archs;
@@ -43,53 +45,102 @@ LONG_SKIP = {"whisper-medium"}
 SWA_WINDOW = 8192
 
 
-def bucket_collective_summary(averager, local_params, colls: dict) -> dict:
-    """Bucket-layout-aware launch accounting, cross-checked against HLO.
+def bucket_collective_summary(averager, local_params, colls: dict,
+                              mesh=None, hlo_text: str = None) -> dict:
+    """Compiled-plan launch accounting, cross-checked against HLO per class.
 
-    Computes the expected ``ppermute`` launch count of one averaging step
-    straight from the ``BucketLayout`` (one collective per bucket per
-    butterfly/gossip round — the invariant the bucketed path exists for;
-    the overlapped scheduler reorders launches but never adds any) and
-    compares it with the ``collective-permute`` count the loop-aware HLO
-    parser found in the compiled step.  ``match`` is exact on dp-only
-    meshes; with a model axis GSPMD may add its own permutes, so
-    ``extra_in_hlo`` reports the difference instead of failing.
+    Asks the averager's :class:`~repro.core.plan.AveragingPlan` for the
+    expected ``ppermute`` launch count of one averaging step — per link
+    class (one collective per bucket per butterfly/gossip round on that
+    class's own budget; the overlapped scheduler reorders launches but
+    never adds any) — and compares it with the ``collective-permute`` count
+    the loop-aware HLO parser found in the compiled step.  With ``mesh``
+    and ``hlo_text`` given, each compiled permute is additionally
+    classified by the mesh axis it moves (``hlo_analysis.
+    permute_axis_counts``) so the cross-check runs per link class, not
+    just in aggregate.  ``match`` is exact on dp-only meshes; with a model
+    axis GSPMD may add its own permutes, so ``extra_in_hlo`` reports the
+    difference instead of failing.
+
+    Also emits ``plan_summary`` — the plan's human-readable compilation
+    record (stages, link class, bucket count, budget per class).
     """
     from repro.core import bucketing, grouping
-    from repro.core import group_allreduce as ga
 
-    leaves = jax.tree_util.tree_leaves(local_params)
-    n_leaves = len(leaves)
+    n_leaves = len(jax.tree_util.tree_leaves(local_params))
     name = getattr(averager, "name", "?")
-    cfg = getattr(averager, "cfg", None)
-    fused = cfg.fused if cfg is not None else getattr(averager, "fused", True)
-    if cfg is not None:     # wagma: resolve the modeled-optimal budget
-        bb = ga.resolve_bucket_bytes(local_params, cfg.bucket_bytes,
-                                     P=averager.P, S=averager.S,
-                                     tau=cfg.tau)
-    else:
-        bb = getattr(averager, "bucket_bytes", bucketing.DEFAULT_BUCKET_BYTES)
-    layout = bucketing.layout_for(local_params, max_bucket_bytes=bb)
+    plan = averager.plan_for(local_params)
+    fused = plan.cfg.fused
 
-    rounds = {"wagma": grouping.ilog2(averager.S) if cfg is not None else 0,
-              "dpsgd": 2,
-              "sgp": getattr(averager, "neighbours", 1),
-              "adpsgd": 1}.get(name, 0)
-    units = layout.n_buckets if fused else n_leaves
-    expected = rounds * units
+    if name == "wagma":
+        offset = plan.offsets[0]            # dryrun compiles phase 0
+        per_class = plan.per_class_expected(offset)
+        expected = plan.expected_ppermutes(offset)
+        mix_budget = None
+    else:
+        # (bit, permutes-on-that-bit) per phase-0 mix round: D-PSGD sends to
+        # both ring neighbours on the minor axis; SGP one permute per
+        # rotating neighbour bit; AD-PSGD one pairwise exchange on bit 0
+        bit_rounds = {"dpsgd": ((0, 2),), "adpsgd": ((0, 1),),
+                      "sgp": tuple((b, 1) for b in range(
+                          getattr(averager, "neighbours", 1)))
+                      }.get(name, ())
+        bits = tuple(b for b, _ in bit_rounds)
+        mix_budget = plan.mix_bucket_bytes(bits)
+        layout = bucketing.layout_for(local_params,
+                                      max_bucket_bytes=mix_budget)
+        units = layout.n_buckets if fused else n_leaves
+        per_class = {}
+        for bit, rounds in bit_rounds:
+            link = plan.topology.link_classes[plan.topology.class_of_bit(bit)]
+            ent = per_class.setdefault(link.name, {
+                "stages": 0, "ppermutes": 0, "bucket_bytes": mix_budget,
+                "n_buckets": units, "axes": ()})
+            ent["stages"] += rounds
+            ent["ppermutes"] += rounds * units
+            ent["axes"] = tuple(dict.fromkeys(
+                ent["axes"] + (plan.topology.axis_of_bit(bit),)))
+        expected = sum(e["ppermutes"] for e in per_class.values())
+
     hlo_pp = int(colls.get("counts_by_kind", {}).get("collective-permute", 0))
-    return {
+    out = {
         "averager": name,
-        "bucket_bytes": bb,
+        "topology": plan.topology.describe(),
         "n_leaves": n_leaves,
-        "n_buckets": layout.n_buckets,
-        "layout": layout.describe(),
-        "ppermutes_per_round_unit": rounds,
+        "class_bucket_bytes": {
+            plan.topology.link_classes[ci].name: bb
+            for ci, bb in plan.class_bucket_bytes.items()},
+        "per_class_expected": per_class,
         "expected_ppermutes": expected,
         "hlo_ppermutes": hlo_pp,
         "match": hlo_pp == expected,
         "extra_in_hlo": hlo_pp - expected,
+        "plan_summary": plan.describe(),
+        # legacy aggregate field kept for existing consumers
+        "n_buckets": max((v["n_buckets"] for v in per_class.values()),
+                         default=0),
     }
+    if mesh is not None and hlo_text is not None:
+        from repro.launch.hlo_analysis import permute_axis_counts
+        axis_counts = permute_axis_counts(
+            hlo_text, tuple(mesh.axis_names),
+            tuple(mesh.shape[a] for a in mesh.axis_names))
+        by_class = {}
+        known = set()
+        for ci in plan.topology.classes_in_use():
+            cls_name = plan.topology.link_classes[ci].name
+            axes = [a for a, c in zip(plan.topology.axis_names,
+                                      plan.topology.axis_class) if c == ci]
+            by_class[cls_name] = sum(axis_counts.get(a, 0) for a in axes)
+            known.update(axes)
+        out["hlo_ppermutes_by_axis"] = axis_counts
+        out["hlo_ppermutes_by_class"] = by_class
+        out["hlo_ppermutes_other_axes"] = sum(
+            n for a, n in axis_counts.items() if a not in known)
+        out["per_class_match"] = {
+            cls: by_class.get(cls, 0) == ent["ppermutes"]
+            for cls, ent in per_class.items()}
+    return out
 
 
 def resolve_config(arch: str, shape_name: str):
@@ -107,7 +158,7 @@ def resolve_config(arch: str, shape_name: str):
 def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
                group_size=None, fsdp: int = 1, donate: bool = True,
                average_dtype: str = "float32", microbatch=None,
-               cfg_overrides: dict = None):
+               cfg_overrides: dict = None, hierarchical: bool = False):
     """Build + lower + compile one (arch, shape) on the given mesh.
 
     Tuning knobs for the §Perf hillclimb: ``mesh`` may be any logical
@@ -141,6 +192,9 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
                 kw["average_dtype"] = average_dtype
                 if group_size:
                     kw["group_size"] = group_size
+            if hierarchical:
+                from repro.core.plan import Topology
+                kw["topology"] = Topology.hierarchical(names, sizes)
             av = make_averager(averager, names, sizes, **kw)
             opt = sgd(0.1, momentum=0.9)
             params_sds, pspecs = stacked_init(model, mesh,
@@ -195,7 +249,10 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
         local_params = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), params_sds,
             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-        bucket_colls = bucket_collective_summary(av, local_params, colls)
+        bucket_colls = bucket_collective_summary(av, local_params, colls,
+                                                 mesh=mesh, hlo_text=hlo)
+        print("  " + bucket_colls["plan_summary"].replace("\n", "\n  "),
+              flush=True)
     n_dp = 1
     for a in mesh.axis_names:
         if a in ("pod", "data"):
@@ -247,6 +304,9 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--averager", default="wagma")
     ap.add_argument("--group-size", type=int, default=None)
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="pod-aware topology: pod axis rides DCN, data "
+                         "rides ICI, per-class bucket budgets")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -267,10 +327,13 @@ def main():
         tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
         if args.averager != "wagma":
             tag += f"__{args.averager}"
+        if args.hierarchical:
+            tag += "__hier"
         print(f"=== {tag} ===", flush=True)
         try:
             res = lower_pair(arch, shape, mesh, averager=args.averager,
-                             group_size=args.group_size)
+                             group_size=args.group_size,
+                             hierarchical=args.hierarchical)
         except Exception as e:
             res = {"status": "error", "error": f"{type(e).__name__}: {e}",
                    "trace": traceback.format_exc()[-2000:]}

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -198,6 +198,56 @@ def collective_summary(hlo_text: str, default_group: int = 1,
         "halved_kinds": list(halve_kinds),
         "unknown_trip_counts": flags["unknown_trip"],
     }
+
+
+_PAIRS_RE = re.compile(
+    r"collective-permute(?:-start)?(?:\.\d+)?\(.*?"
+    r"source_target_pairs=\{((?:\{\d+,\s*\d+\},?)*)\}")
+
+
+def permute_axis_counts(hlo_text: str, axis_names: Sequence[str],
+                        axis_sizes: Sequence[int]) -> Dict[str, int]:
+    """Classify each compiled collective-permute by the mesh axis it moves.
+
+    Parses every ``collective-permute``'s ``source_target_pairs`` and maps
+    the first moving pair's device-id delta onto mesh coordinates (device id
+    = C-order flattened index over ``axis_sizes``, major-to-minor — the
+    ``jax.make_mesh`` default).  The axis whose coordinate differs is the
+    axis the permute rides; a permute whose pairs disagree (or that moves
+    several axes at once) lands under ``"mixed"``.  The per-link-class HLO
+    cross-check in ``dryrun.bucket_collective_summary`` feeds these counts
+    through ``Topology.axis_class`` so ICI and DCN launches are verified
+    separately, not just in aggregate.
+    """
+    names = list(axis_names)
+    sizes = [int(s) for s in axis_sizes]
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+
+    def coords(dev: int) -> Tuple[int, ...]:
+        return tuple((dev // strides[i]) % sizes[i] for i in range(len(sizes)))
+
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _PAIRS_RE.search(line.strip().rstrip(","))
+        if not m:
+            continue
+        pairs = re.findall(r"\{(\d+),\s*(\d+)\}", "{" + m.group(1) + "}")
+        axes = set()
+        for src, tgt in pairs:
+            s, t = int(src), int(tgt)
+            if s == t:
+                continue
+            cs, ct = coords(s), coords(t)
+            moved = [i for i in range(len(sizes)) if cs[i] != ct[i]]
+            axes.update(moved if len(moved) == 1 else [-1])
+        if not axes:
+            continue
+        key = names[axes.pop()] if len(axes) == 1 and -1 not in axes \
+            else "mixed"
+        counts[key] = counts.get(key, 0) + 1
+    return counts
 
 
 def count_ppermutes(jaxpr) -> int:

@@ -36,7 +36,7 @@ class Trainer:
     def __init__(self, cfg, mesh, *, averager="wagma", group_size=None,
                  tau=10, optimizer="sgd", learning_rate=0.1, momentum=0.9,
                  seq_len=512, global_batch=None, seed=0, microbatch=None,
-                 imbalanced=False):
+                 imbalanced=False, topology=None):
         self.cfg = cfg
         self.mesh = mesh
         self.model = build_model(cfg)
@@ -48,6 +48,11 @@ class Trainer:
             kw = {"group_size": group_size, "tau": tau}
         elif averager == "local_sgd":
             kw = {"sync_period": tau}
+        if topology is not None:
+            # pod-aware (or custom) Topology: the averager compiles one
+            # AveragingPlan per tree structure on it — per-link-class bucket
+            # budgets, stage classification, wavefront schedule (DESIGN §9)
+            kw["topology"] = topology
         self.averager = make_averager(averager, names, sizes, **kw)
         if optimizer == "sgd":
             self.opt = sgd(learning_rate, momentum=momentum)
@@ -127,6 +132,9 @@ def main():
     ap.add_argument("--data-axis", type=int, default=None)
     ap.add_argument("--model-axis", type=int, default=None)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pod-dcn", action="store_true",
+                    help="hierarchical topology: the pod axis rides DCN "
+                         "constants/budget, data rides ICI (DESIGN.md §9)")
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--imbalanced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
@@ -140,11 +148,18 @@ def main():
         mesh = make_production_mesh(multi_pod=args.multi_pod)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    topology = None
+    if args.pod_dcn:
+        from repro.core.plan import Topology
+        names, sizes = dp_axis_layout(mesh.axis_names, dict(mesh.shape),
+                                      dp_axes_of(mesh))
+        topology = Topology.hierarchical(names, sizes, dcn_axes=("pod",))
     tr = Trainer(cfg, mesh, averager=args.averager,
                  group_size=args.group_size, tau=args.tau,
                  optimizer=args.optimizer, learning_rate=args.lr,
                  seq_len=args.seq_len, global_batch=args.global_batch,
-                 microbatch=args.microbatch, imbalanced=args.imbalanced)
+                 microbatch=args.microbatch, imbalanced=args.imbalanced,
+                 topology=topology)
     hist = tr.run(args.steps, ckpt_dir=args.ckpt_dir,
                   ckpt_every=50 if args.ckpt_dir else 0)
     print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")

@@ -6,20 +6,22 @@ optimiser step, then the averager's collective (group butterfly / global
 psum / gossip) — and *auto* (GSPMD) over the ``model`` axis for
 tensor/expert parallelism inside each replica.
 
-The averager's collective runs the **bucketed fused path** by default
-(DESIGN.md §7): inside the manual region the params pytree is packed into a
-few dtype-homogeneous flat buckets (core/bucketing.py, layout cached across
-traces; budget picked by ``bucketing.choose_bucket_bytes`` unless pinned),
-each butterfly stage issues one ppermute per bucket instead of one per
-leaf, and the ``(w + recv) * 1/S`` combine streams through the fused Pallas
-kernel with fp32 accumulation.  Buckets are emitted in the **overlapped
-wavefront order** (DESIGN.md §8, ``WagmaConfig(overlap=True)`` default):
-bucket k+1's ppermute is issued before bucket k's combine and no stage
-barriers exist between buckets, so XLA's async collective-permute can hide
-the combine behind the wire; same-tick combines share one multi-bucket
-Pallas launch.  Per-leaf (``fused=False``) and serial-bucketed
-(``overlap=False``) behaviour remain available and are differentially
-tested to match bit-for-bit.
+The averager's collective runs through a **compiled AveragingPlan**
+(core/plan.py, DESIGN.md §9): the averager's frozen ``Topology`` (mesh axes
+→ link classes with their own alpha/beta/gamma constants) is compiled once
+per tree structure into a plan that owns the per-stage link classification
+(which butterfly bits ride ICI vs DCN), per-link-class bucket layouts and
+modeled-optimal budgets, and the wavefront schedule; inside the manual
+region the step simply calls ``plan.average(tree, phase)`` /
+``plan.sync(tree)``.  The execution realisation is unchanged from §7/§8:
+dtype-homogeneous flat buckets (one ppermute per bucket per stage), fused
+Pallas combine with fp32 accumulation, overlapped wavefront emission order
+(bucket k+1's ppermute before bucket k's combine, same-tick combines in one
+multi-bucket Pallas launch) — but every stage run now packs at *its link
+class's* budget, and hierarchical (pod-aware) topologies repack only at
+class boundaries.  Per-leaf (``fused=False``) and serial-bucketed
+(``overlap=False``) behaviour remain available as plan configs and are
+differentially tested to match bit-for-bit.
 
 Because model averaging needs **divergent per-replica weights**, params and
 optimiser state carry a leading dp-replica axis of size P_dp, sharded over

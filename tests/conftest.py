@@ -23,5 +23,6 @@ def _clear_bucket_layout_cache():
     (tests/test_bucketing.py) independent of test order.
     """
     yield
-    from repro.core import bucketing
+    from repro.core import bucketing, plan
     bucketing.clear_layout_cache()
+    plan.clear_plan_cache()

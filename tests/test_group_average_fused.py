@@ -87,6 +87,7 @@ def test_fused_equals_per_leaf_equals_stacked_every_offset():
 
 def test_ppermute_count_drops_to_buckets_times_stages():
     out = run_sub("""
+        from repro.core import plan as plan_mod
         P_dp, S = 8, 4
         mesh = jax.make_mesh((8,), ("data",))
         names, sizes = ga.dp_axis_layout(("data",), {"data": 8}, ("data",))
@@ -95,7 +96,12 @@ def test_ppermute_count_drops_to_buckets_times_stages():
                 for i in range(6)}
         tree["h"] = jnp.asarray(rng.normal(size=(8, 16)),
                                 jnp.float32).astype(jnp.bfloat16)
-        layout = bucketing.layout_for(jax.tree.map(lambda a: a[0], tree))
+        # launch accounting now comes from the compiled plan: buckets are
+        # laid out over the fp32-cast (accumulation-dtype) tree
+        pl = plan_mod.compile_plan(
+            plan_mod.Topology.flat(names, sizes),
+            jax.tree.map(lambda a: a[0], tree),
+            plan_mod.AveragingConfig(group_size=S, average_dtype="float32"))
         n_leaves = len(jax.tree.leaves(tree))
         stages = grouping.ilog2(S)
 
@@ -111,8 +117,11 @@ def test_ppermute_count_drops_to_buckets_times_stages():
         n_fused = count_ppermutes(jax.make_jaxpr(make(True))(tree).jaxpr)
         n_leaf = count_ppermutes(jax.make_jaxpr(make(False))(tree).jaxpr)
         assert n_leaf == n_leaves * stages, (n_leaf, n_leaves, stages)
-        assert n_fused == layout.n_buckets * stages, (n_fused, layout.n_buckets)
-        assert layout.n_buckets < n_leaves
+        assert n_fused == pl.expected_ppermutes(offset=0), \\
+            (n_fused, pl.expected_ppermutes(offset=0))
+        n_buckets = pl.class_layout(0).n_buckets
+        assert n_fused == n_buckets * stages, (n_fused, n_buckets)
+        assert n_buckets < n_leaves
         print("PPERMUTES", n_leaf, "->", n_fused)
     """)
     assert "PPERMUTES" in out

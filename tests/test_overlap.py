@@ -161,6 +161,7 @@ def test_overlap_preserves_launch_count_and_matches_hlo():
     collective-permute count matches the BucketLayout expectation (the
     dry-run cross-check, exercised end to end on a dp-only mesh)."""
     out = run_sub("""
+        from repro.core import plan as plan_mod
         P_dp, S = 8, 4
         mesh = jax.make_mesh((8,), ("data",))
         names, sizes = ga.dp_axis_layout(("data",), {"data": 8}, ("data",))
@@ -170,10 +171,12 @@ def test_overlap_preserves_launch_count_and_matches_hlo():
         tree["h"] = jnp.asarray(rng.normal(size=(8, 16)),
                                 jnp.float32).astype(jnp.bfloat16)
         local = jax.tree.map(lambda a: a[0], tree)
-        bb = ga.resolve_bucket_bytes(local, None, P=P_dp, S=S)
-        layout = bucketing.layout_for(local, max_bucket_bytes=bb)
+        pl = plan_mod.compile_plan(
+            plan_mod.Topology.flat(names, sizes), local,
+            plan_mod.AveragingConfig(group_size=S, average_dtype="float32"))
         stages = grouping.ilog2(S)
-        expected = layout.n_buckets * stages
+        expected = pl.expected_ppermutes(offset=0)
+        assert expected == pl.class_layout(0).n_buckets * stages
 
         def make(overlap):
             return jax.jit(compat.shard_map(
