@@ -178,6 +178,51 @@ def modeled_hierarchical_wmt(*, P_cluster: int = 64, n_pods: int = 4,
     }
 
 
+def modeled_fsdp_wmt(*, P_cluster: int = 64, n_pods: int = 4,
+                     tau: int = 10) -> dict:
+    """FSDP-within-pod model for the WMT transformer (DESIGN.md §10).
+
+    Replicas inside a pod share weights sharded over the intra-pod (data)
+    axis: persistent per-device param+opt memory ÷ pod size, pod-to-pod
+    butterfly on shard slices (DCN wire ÷ pod size), plus the per-step
+    all-gather/reduce-scatter overhead on ICI.  ``--check`` gates
+    (a) memory ratio >= pod size and (b) the modeled sharded step within
+    10% of (i.e. not slower than 1.1x) the replicated hierarchical step.
+    """
+    from repro.configs import get_config
+    from repro.core import plan as plan_mod
+    from repro.launch.costmodel import replica_memory_bytes
+    from repro.models.registry import build_model
+
+    cfg = get_config("transformer-wmt")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    payload = bucketing.tree_payload_bytes(shapes)
+    n_data = P_cluster // n_pods
+    topo = plan_mod.Topology.hierarchical(("data", "pod"), (n_data, n_pods),
+                                          dcn_axes=("pod",))
+    S_rep = grouping.default_group_size(P_cluster)
+    S_eff = grouping.default_group_size(n_pods)
+    replicated = plan_mod.modeled_wagma_step_seconds(payload, topo, S_rep,
+                                                     tau=tau)
+    fsdp = plan_mod.modeled_fsdp_step_seconds(payload, topo, S_eff,
+                                              shard_axis="data", tau=tau)
+    mem = replica_memory_bytes(payload, pod_size=n_data)
+    return {
+        "config": cfg.name,
+        "P": P_cluster, "n_pods": n_pods, "pod_size": n_data,
+        "S_replicated": S_rep, "S_pod_level": S_eff, "tau": tau,
+        "payload_bytes": payload,
+        "topology": topo.describe(),
+        "per_class": fsdp["per_class"],
+        "replicated_hier_step_s": replicated["step_s"],
+        "fsdp_step_s": fsdp["step_s"],
+        "gather_scatter_s": fsdp["gather_scatter_s"],
+        "step_ratio": fsdp["step_s"] / replicated["step_s"],
+        **mem,
+    }
+
+
 def live_mesh_bench(args) -> dict:
     """Wall-clock + launch-count measurement on the 8-device CPU mesh."""
     n_dp, S = 8, args.S
@@ -203,12 +248,16 @@ def live_mesh_bench(args) -> dict:
           f"S={S} ({stages} butterfly stages); "
           f"layout: {layout.n_buckets} buckets {layout.describe()}")
 
+    from repro.core import plan as plan_mod
+    topo = plan_mod.Topology.flat(names, sizes)
     results = {}
     for name, kw in variants.items():
+        plan = plan_mod.compile_plan(
+            topo, jax.tree.map(lambda a: a[0], tree),
+            plan_mod.AveragingConfig(group_size=S, average_dtype="float32",
+                                     bucket_bytes=bucket_bytes, **kw))
         f = jax.jit(compat.shard_map(
-            lambda tr, kw=kw: ga.group_average(
-                tr, offset=0, P=n_dp, S=S, axis_names=names, axis_sizes=sizes,
-                average_dtype=jnp.float32, bucket_bytes=bucket_bytes, **kw),
+            lambda tr, plan=plan: plan.average_offset(tr, 0),
             mesh=mesh, in_specs=P("data"), out_specs=P("data"),
             axis_names={"data"}))
         n_pp = count_ppermutes(jax.make_jaxpr(f)(tree).jaxpr)
@@ -243,7 +292,8 @@ def main():
     args = ap.parse_args()
 
     report = {"modeled_transformer_wmt": modeled_transformer_wmt(),
-              "modeled_hierarchical_wmt": modeled_hierarchical_wmt()}
+              "modeled_hierarchical_wmt": modeled_hierarchical_wmt(),
+              "modeled_fsdp_wmt": modeled_fsdp_wmt()}
     m = report["modeled_transformer_wmt"]
     print(f"[model] transformer_wmt @ P={m['P']} S={m['S']}: "
           f"serial {m['serial']['modeled_step_s'] * 1e3:.3f} ms/step "
@@ -261,6 +311,16 @@ def main():
           f"32MiB {h['single_budget_step_s'] * 1e3:.3f} ms/step "
           f"({h['per_class_budget_win']:.4f}x), flat-topology ref "
           f"{h['flat_topology_step_s'] * 1e3:.3f} ms/step")
+    fd = report["modeled_fsdp_wmt"]
+    print(f"[model] fsdp-within-pod @ P={fd['P']} pod_size="
+          f"{fd['pod_size']}: mem/dev "
+          f"{fd['mem_replicated'] / 2**20:.0f} -> "
+          f"{fd['mem_fsdp_within_pod'] / 2**20:.0f} MiB "
+          f"({fd['mem_ratio']:.1f}x), step "
+          f"{fd['fsdp_step_s'] * 1e3:.3f} ms (incl. AG/RS "
+          f"{fd['gather_scatter_s'] * 1e3:.3f} ms) vs replicated hier "
+          f"{fd['replicated_hier_step_s'] * 1e3:.3f} ms "
+          f"({fd['step_ratio']:.3f}x)")
 
     if not args.check:
         report["live_8dev_cpu"] = live_mesh_bench(args)
@@ -276,6 +336,11 @@ def main():
     ok_hier = (h["per_class_budget_step_s"] <= h["single_budget_step_s"]
                and len({v["bucket_bytes"] for v in h["per_class"].values()})
                == len(h["per_class"]))
+    # fsdp gate: persistent per-device param+opt memory must divide by at
+    # least the pod size, and the sharded step model must stay within 10%
+    # of the replicated hierarchical step it replaces
+    ok_fsdp = (fd["mem_ratio"] >= fd["pod_size"]
+               and fd["step_ratio"] <= 1.10)
     if args.check:
         print("CHECK", "PASS" if ok else "FAIL",
               f"(overlapped {m['overlapped']['modeled_step_s']:.6e} "
@@ -283,7 +348,11 @@ def main():
         print("CHECK-HIER", "PASS" if ok_hier else "FAIL",
               f"(per-class {h['per_class_budget_step_s']:.6e} <= single "
               f"{h['single_budget_step_s']:.6e}, budgets {budgets})")
-        return 0 if (ok and ok_hier) else 1
+        print("CHECK-FSDP", "PASS" if ok_fsdp else "FAIL",
+              f"(mem ratio {fd['mem_ratio']:.1f} >= pod "
+              f"{fd['pod_size']}, step ratio {fd['step_ratio']:.3f} "
+              f"<= 1.10)")
+        return 0 if (ok and ok_hier and ok_fsdp) else 1
     return 0
 
 

@@ -220,6 +220,42 @@ def hierarchical_win(P: int = 64, *, model_bytes: float = 245e6, S=None,
             "speedup": single / per_class}
 
 
+def fsdp_win(P: int = 64, *, model_bytes: float = 245e6, n_pods: int = 4,
+             tau: int = 10, opt_bytes_ratio: float = 2.0) -> dict:
+    """Modeled memory + step-time effect of FSDP-within-pod (DESIGN.md §10).
+
+    Replicas inside a pod share weights sharded over the intra-pod (ICI)
+    axis and act as one logical WAGMA worker: persistent per-device
+    param+opt memory divides by the pod size, the pod-to-pod butterfly
+    moves only each device's shard slice (DCN traffic also ÷ pod size),
+    and every step pays the per-bucket parameter all-gather + gradient
+    reduce-scatter on ICI.  Compared against the replicated hierarchical
+    plan on the same (pod x data) topology.
+    """
+    from repro.core import grouping as _grouping
+    from repro.launch.costmodel import replica_memory_bytes
+
+    n_data = P // n_pods
+    topo = plan_mod.Topology.hierarchical(
+        ("data", "pod"), (n_data, n_pods), dcn_axes=("pod",))
+    S_rep = _grouping.default_group_size(P)
+    S_eff = _grouping.default_group_size(n_pods)
+    replicated = plan_mod.modeled_wagma_step_seconds(
+        int(model_bytes), topo, S_rep, tau=tau)
+    fsdp = plan_mod.modeled_fsdp_step_seconds(
+        int(model_bytes), topo, S_eff, shard_axis="data", tau=tau)
+    mem = replica_memory_bytes(model_bytes, pod_size=n_data,
+                               opt_bytes_ratio=opt_bytes_ratio)
+    return {
+        "pod_size": n_data, "n_pods": n_pods,
+        "replicated_step_s": replicated["step_s"],
+        "fsdp_step_s": fsdp["step_s"],
+        "gather_scatter_s": fsdp["gather_scatter_s"],
+        "step_ratio": fsdp["step_s"] / max(replicated["step_s"], 1e-30),
+        **mem,
+    }
+
+
 def overlap_win(P: int = 64, *, model_bytes: float = 50e6, S=None,
                 n_buckets: int = 4, gamma: float = COMBINE_SPB) -> dict:
     """Modeled per-step win of the overlapped bucket pipeline (DESIGN §8).

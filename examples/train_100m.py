@@ -38,18 +38,36 @@ def main():
     ap.add_argument("--tau", type=int, default=10)
     ap.add_argument("--group-size", type=int, default=2)
     ap.add_argument("--ckpt", default="/tmp/wagma_100m_ckpt")
+    ap.add_argument("--sharding", default="replicated",
+                    choices=["replicated", "fsdp"],
+                    help="fsdp: FSDP-within-pod sharded replicas on a "
+                         "(pod, data) dp mesh — params/opt shard over the "
+                         "intra-pod data axis, group averaging runs "
+                         "pod-to-pod (DESIGN.md §10)")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    if args.sharding == "fsdp":
+        # fsdp needs a pod axis to average over once data carries shards;
+        # the dp x tp combination needs the modern toolchain (see
+        # compat.PARTIAL_AUTO_SCAN_OK) so JAX 0.4.x drops the model axis
+        from repro import compat
+        n_model = 2 if compat.PARTIAL_AUTO_SCAN_OK else 1
+        mesh = jax.make_mesh((2, 8 // (2 * n_model), n_model),
+                             ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = config_100m()
     import numpy as np
     n_params = None
 
     tr = Trainer(cfg, mesh, averager="wagma", group_size=args.group_size,
                  tau=args.tau, optimizer="sgd", learning_rate=0.2,
-                 seq_len=args.seq_len, global_batch=args.global_batch)
-    n_params = sum(int(np.prod(l.shape[1:]))
-                   for l in jax.tree.leaves(tr.params))
+                 seq_len=args.seq_len, global_batch=args.global_batch,
+                 sharding=args.sharding)
+    print(tr.plan().describe())
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(
+                       jax.eval_shape(tr.model.init, jax.random.PRNGKey(0))))
     print(f"model: {n_params/1e6:.1f}M params, P_dp={tr.n_dp}, "
           f"S={tr.averager.S}, tau={args.tau}")
     hist = tr.run(args.steps, log_every=max(args.steps // 10, 1))

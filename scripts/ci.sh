@@ -34,3 +34,14 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 # single global budget (distinct per-class choices).  Writes the tracked
 # BENCH_group_average.json; model-only, a few seconds.
 python benchmarks/bench_group_average.py --check
+
+# FSDP-within-pod smoke (DESIGN.md §10): compile the sharded train step on
+# an 8-device (pod=2, data=4, model=1) host mesh with the hierarchical
+# topology and cross-check the plan — the run exits non-zero if the plan's
+# per-class ppermute expectation mismatches the compiled HLO or any
+# parameter all-gather / gradient reduce-scatter leaks off the intra-pod
+# shard axis onto a DCN (pod) axis.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+  --smoke --sharding fsdp --hierarchical --mesh-shape 2,4,1 \
+  --out experiments/dryrun-ci

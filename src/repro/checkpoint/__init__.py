@@ -1,3 +1,6 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, consolidate
+from repro.checkpoint.ckpt import (checkpoint_sharding, consolidate,
+                                   load_checkpoint, load_replica_state,
+                                   save_checkpoint, save_replica_state)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "consolidate"]
+__all__ = ["checkpoint_sharding", "consolidate", "load_checkpoint",
+           "load_replica_state", "save_checkpoint", "save_replica_state"]

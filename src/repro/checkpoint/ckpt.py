@@ -3,6 +3,17 @@
 WAGMA keeps *divergent* per-replica weights (leading dp axis). ``consolidate``
 averages the replica axis to emit a single serving/export model — the paper's
 "global consensus achieved post-training by choosing the model average" (Q4).
+
+:func:`save_replica_state` / :func:`load_replica_state` round-trip the whole
+:class:`~repro.core.replica.ReplicaState` (params + optimiser state + the
+averager step/phase bookkeeping) in either layout the
+:class:`~repro.core.replica.ShardingPolicy` dictates: replicated
+(P_dp, ...)-stacked leaves or FSDP-within-pod (P_pods, bucket) shard
+buffers (DESIGN.md §10).  The manifest records the policy, and ``load``
+converts across policies through the compiled plan when the restoring run
+uses the other one — save from a sharded run, restore into a replicated
+run and vice versa, with ``consolidate`` agreeing either way
+(tests/test_replica.py pins the equality).
 """
 
 from __future__ import annotations
@@ -83,3 +94,73 @@ def consolidate(stacked_params):
     return jax.tree.map(
         lambda a: jnp.mean(a.astype(jnp.float32), axis=0).astype(a.dtype),
         stacked_params)
+
+
+# ---------------------------------------------------------------------------
+# ReplicaState round trip (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def save_replica_state(path: str, state, sharding=None,
+                       metadata: Optional[dict] = None):
+    """Persist a whole ReplicaState (params, opt, step/phase, policy)."""
+    from repro.core.replica import REPLICATED
+    sharding = sharding or REPLICATED
+    meta = dict(metadata or {})
+    meta.update({
+        "replica_state": True,
+        "phase": int(np.asarray(state.phase)),
+        "sharding": sharding.kind,
+        "shard_axis": sharding.shard_axis,
+    })
+    save_checkpoint(path, state.params, opt_state=state.opt_state,
+                    step=int(np.asarray(state.step)), metadata=meta)
+
+
+def checkpoint_sharding(path: str):
+    """The ShardingPolicy a replica-state checkpoint was written under."""
+    from repro.core.replica import ShardingPolicy
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)["metadata"]
+    return ShardingPolicy(meta.get("sharding", "replicated"),
+                          meta.get("shard_axis"))
+
+
+def load_replica_state(path: str, template, *, sharding=None, plan=None):
+    """Restore a ReplicaState into ``template``'s layout.
+
+    ``sharding`` is the *restoring run's* policy (default replicated);
+    when it differs from the policy the checkpoint was written under, the
+    state is rebuilt in the source layout (derived from ``plan`` — the
+    compiled AveragingPlan of the model, required for any cross-policy
+    restore) and converted host-side: pod models broadcast to members
+    (sharded -> replicated) or pod-averaged and packed (replicated ->
+    sharded).
+    """
+    from repro.core import replica as replica_mod
+    sharding = sharding or replica_mod.REPLICATED
+    src = checkpoint_sharding(path)
+    if src.kind == sharding.kind:
+        src_template = template
+    elif plan is None:
+        raise ValueError(
+            f"checkpoint at {path} was written under {src.describe()} but "
+            f"the run uses {sharding.describe()}; pass the compiled plan "
+            "to convert")
+    elif src.is_sharded:
+        src_template = replica_mod.sharded_state_template(
+            plan, template.opt_state)
+    else:
+        src_template = replica_mod.replicated_state_template(
+            plan, template.opt_state)
+
+    params, opt, step = load_checkpoint(path, src_template.params,
+                                        src_template.opt_state)
+    with open(os.path.join(path, "manifest.json")) as f:
+        phase = json.load(f)["metadata"].get("phase", -1)
+    state = replica_mod.ReplicaState.create(params, opt, step=step,
+                                            phase=phase)
+    if src.kind == sharding.kind:
+        return state
+    if src.is_sharded:
+        return replica_mod.fsdp_to_replicated_state(state, plan)
+    return replica_mod.replicated_to_fsdp_state(state, plan)

@@ -8,6 +8,11 @@
 * overlap.py         — software-pipelined bucket scheduler: wavefront over
                        the (bucket, stage) grid so bucket k+1's ppermute is
                        on the wire while bucket k combines (DESIGN.md §8)
+* replica.py         — ReplicaState & ShardingPolicy (DESIGN.md §10): the
+                       pytree the train step/averager/checkpoint/cost model
+                       operate on — replicated (P_dp, ...)-stacked trees or
+                       FSDP-within-pod shard buckets — plus host-side
+                       cross-policy conversion and consolidation
 * plan.py            — THE averaging API (DESIGN.md §9): frozen Topology
                        (mesh axes → link classes with own alpha/beta/gamma)
                        compiled once per tree structure into an
@@ -28,14 +33,15 @@ Group patterns are static per compiled step: the host loop dispatches one of
 from repro.core.grouping import (default_group_size, groups_for_iteration,
                                  mask_bits, n_phases, phase_offset,
                                  propagation_latency)
+from repro.core.replica import ReplicaState, ShardingPolicy
 from repro.core.plan import (AveragingConfig, AveragingPlan, LinkClass,
                              Topology, compile_plan)
 from repro.core.wagma import WagmaAverager, WagmaConfig
 from repro.core.baselines import make_averager
 
 __all__ = [
-    "AveragingConfig", "AveragingPlan", "LinkClass", "Topology",
-    "compile_plan",
+    "AveragingConfig", "AveragingPlan", "LinkClass", "ReplicaState",
+    "ShardingPolicy", "Topology", "compile_plan",
     "WagmaAverager", "WagmaConfig", "make_averager",
     "default_group_size", "groups_for_iteration", "mask_bits",
     "n_phases", "phase_offset", "propagation_latency",

@@ -59,6 +59,7 @@ import numpy as np
 from repro.core import bucketing, grouping
 from repro.core import plan as plan_mod
 from repro.core.plan import butterfly_exchange
+from repro.core.replica import REPLICATED, ShardingPolicy
 
 
 class _AveragerBase:
@@ -69,7 +70,8 @@ class _AveragerBase:
                  fused: bool = True,
                  bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
                  overlap: bool = True,
-                 topology: Optional[plan_mod.Topology] = None):
+                 topology: Optional[plan_mod.Topology] = None,
+                 sharding: ShardingPolicy = REPLICATED):
         self.axis_names = tuple(dp_axis_names)
         self.axis_sizes = tuple(int(s) for s in dp_axis_sizes)
         if topology is None:
@@ -80,7 +82,19 @@ class _AveragerBase:
                 f"topology axes {topology.axis_names}/{topology.axis_sizes} "
                 f"do not match dp axes {self.axis_names}/{self.axis_sizes}")
         self.topology = topology
+        self.sharding = sharding
         self.P = int(np.prod(self.axis_sizes))
+        # Collectives ride the *effective* replica axes: under
+        # fsdp_within_pod the shard axis carries parameter slices, not
+        # divergent replicas, so every mix/ring/psum spans the remaining
+        # (pod-level) axes only (DESIGN.md §10).
+        if sharding.is_sharded:
+            eff = topology.drop_axis(sharding.shard_axis)
+        else:
+            eff = topology
+        self.comm_axis_names = eff.axis_names
+        self.comm_axis_sizes = eff.axis_sizes
+        self.P_eff = eff.P
         self.fused = fused
         self.bucket_bytes = bucket_bytes
         self.overlap = overlap
@@ -96,7 +110,8 @@ class _AveragerBase:
 
     def plan_for(self, tree) -> plan_mod.AveragingPlan:
         """The compiled plan for this tree structure (cached by compile)."""
-        return plan_mod.compile_plan(self.topology, tree, self._cfg)
+        return plan_mod.compile_plan(self.topology, tree, self._cfg,
+                                     self.sharding)
 
     def comm(self, tree, phase: int):
         return tree
@@ -119,10 +134,12 @@ class AllreduceAverager(_AveragerBase):
         # fp32 accumulation (also: XLA-CPU crashes on bf16 manual all-reduce);
         # bucketed: one pmean per bucket — the MG-WFBP merged-gradient layout.
         # The reduction IS the collective, so combine is the identity; the
-        # global collective spans every dp bit -> bucket budget follows the
-        # topology's bottleneck link class.
+        # global collective spans every effective dp bit -> bucket budget
+        # follows the topology's bottleneck link class.  Under
+        # fsdp_within_pod the tree is the grad shard buffers (already
+        # pod-meaned over the shard axis), so the pmean spans pods only.
         return self._mix_tree(
-            tree, lambda g: jax.lax.pmean(g, self.axis_names),
+            tree, lambda g: jax.lax.pmean(g, self.comm_axis_names),
             lambda g, r: r)
 
 
@@ -149,13 +166,13 @@ class DPSGDAverager(_AveragerBase):
         # of each pod slice plus a pod-crossing handled by the same shift on
         # the major axis every n_minor steps — approximated by a per-axis ring
         # (each device still exchanges with exactly two neighbours).
-        n = self.axis_sizes[0]
+        n = self.comm_axis_sizes[0]
         fwd = [(i, (i + 1) % n) for i in range(n)]
         bwd = [(i, (i - 1) % n) for i in range(n)]
 
         def issue(acc):
-            return (jax.lax.ppermute(acc, self.axis_names[0], fwd),
-                    jax.lax.ppermute(acc, self.axis_names[0], bwd))
+            return (jax.lax.ppermute(acc, self.comm_axis_names[0], fwd),
+                    jax.lax.ppermute(acc, self.comm_axis_names[0], bwd))
 
         def combine(acc, recv):
             left, right = recv
@@ -173,15 +190,16 @@ class SGPAverager(_AveragerBase):
                  **kw):
         super().__init__(dp_axis_names, dp_axis_sizes, **kw)
         self.neighbours = neighbours
-        self.n_phases = grouping.ilog2(self.P)
+        self.n_phases = grouping.ilog2(self.P_eff)
 
     def comm(self, tree, phase: int):
-        lp = grouping.ilog2(self.P)
+        lp = grouping.ilog2(self.P_eff)
         bits = tuple((phase + k) % lp for k in range(self.neighbours))
 
         def issue(acc):
             return tuple(
-                butterfly_exchange(acc, b, self.axis_names, self.axis_sizes)
+                butterfly_exchange(acc, b, self.comm_axis_names,
+                                   self.comm_axis_sizes)
                 for b in bits)
 
         def combine(acc, recvs):
@@ -199,13 +217,13 @@ class ADPSGDAverager(_AveragerBase):
 
     def __init__(self, dp_axis_names, dp_axis_sizes, **kw):
         super().__init__(dp_axis_names, dp_axis_sizes, **kw)
-        self.n_phases = grouping.ilog2(self.P)
+        self.n_phases = grouping.ilog2(self.P_eff)
 
     def comm(self, tree, phase: int):
         return self._mix_tree(
             tree,
-            lambda acc: butterfly_exchange(acc, phase, self.axis_names,
-                                           self.axis_sizes),
+            lambda acc: butterfly_exchange(acc, phase, self.comm_axis_names,
+                                           self.comm_axis_sizes),
             lambda acc, other: (acc + other) / 2.0,
             bits=(phase,))
 
@@ -220,9 +238,10 @@ def make_averager(name: str, dp_axis_names, dp_axis_sizes, **kw):
     name = name.lower()
     if name == "wagma":
         topology = kw.pop("topology", None)
+        sharding = kw.pop("sharding", REPLICATED)
         cfg = WagmaConfig(**kw) if kw else WagmaConfig()
         return WagmaAverager(dp_axis_names, dp_axis_sizes, cfg,
-                             topology=topology)
+                             topology=topology, sharding=sharding)
     table = {
         "allreduce": AllreduceAverager,
         "local_sgd": LocalSGDAverager,

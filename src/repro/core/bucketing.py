@@ -90,13 +90,20 @@ class BucketLayout:
                                            self.bucket_dtypes)))
 
 
-def _pad_to_lanes(n: int) -> int:
-    return -(-n // _LANES) * _LANES if n else 0
+def _pad_to_lanes(n: int, align: int = 1) -> int:
+    unit = _LANES * max(int(align), 1)
+    return -(-n // unit) * unit if n else 0
 
 
-def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
-                 ) -> BucketLayout:
-    """Plan buckets for ``tree`` (arrays or ShapeDtypeStructs)."""
+def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 align: int = 1) -> BucketLayout:
+    """Plan buckets for ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``align`` pads every bucket to a multiple of ``align * 128`` elements
+    instead of plain 128 — the sharded-replica path (core/replica.py,
+    DESIGN.md §10) passes the intra-pod shard count so each bucket splits
+    into ``align`` equal, lane-aligned shard slices.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     metas = [(int(np.prod(l.shape, dtype=np.int64)), tuple(l.shape),
               np.dtype(l.dtype)) for l in leaves]
@@ -120,7 +127,7 @@ def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
         slot_of_leaf[li] = _LeafSlot(bi, bucket_sizes[bi], size, shape, dtype)
         bucket_sizes[bi] += size
 
-    bucket_sizes = [_pad_to_lanes(s) for s in bucket_sizes]
+    bucket_sizes = [_pad_to_lanes(s, align) for s in bucket_sizes]
     return BucketLayout(treedef, tuple(slot_of_leaf[i] for i in range(len(metas))),
                         tuple(bucket_sizes), tuple(bucket_dtypes))
 
@@ -153,45 +160,56 @@ def layout_cache_stats() -> dict:
     return dict(_LAYOUT_STATS)
 
 
-def layout_for(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES
-               ) -> BucketLayout:
+def layout_for(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+               align: int = 1) -> BucketLayout:
     """Cached :func:`build_layout` keyed on structure, not array identity.
 
     The key is exactly what the layout is a function of — treedef, per-leaf
-    (shape, dtype), and the byte budget.  Anything else a caller threads
-    around (phase offset, averaging dtype, overlap mode) must NOT enter the
-    key: re-tracing every phase variant of a step reuses one layout.
+    (shape, dtype), the byte budget, and the shard alignment.  Anything
+    else a caller threads around (phase offset, averaging dtype, overlap
+    mode) must NOT enter the key: re-tracing every phase variant of a step
+    reuses one layout.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     key = (treedef, tuple((tuple(l.shape), np.dtype(l.dtype).str)
-                          for l in leaves), max_bucket_bytes)
+                          for l in leaves), max_bucket_bytes, align)
     layout = _LAYOUT_CACHE.get(key)
     if layout is None:
         _LAYOUT_STATS["misses"] += 1
         layout = _LAYOUT_CACHE[key] = build_layout(
-            tree, max_bucket_bytes=max_bucket_bytes)
+            tree, max_bucket_bytes=max_bucket_bytes, align=align)
     else:
         _LAYOUT_STATS["hits"] += 1
     return layout
 
 
-def pack(tree, layout: BucketLayout) -> Tuple[jax.Array, ...]:
-    """Concatenate the tree's leaves into the layout's flat buckets."""
+def pack(tree, layout: BucketLayout,
+         dtype=None) -> Tuple[jax.Array, ...]:
+    """Concatenate the tree's leaves into the layout's flat buckets.
+
+    ``dtype`` overrides every bucket's dtype (leaves are cast while
+    packing) — used by the sharded-replica path to pack gradients or
+    fp32 optimiser moments into the *storage* layout's slot positions.
+    """
     leaves = jax.tree_util.tree_leaves(tree)
     parts: list = [[] for _ in range(layout.n_buckets)]
     filled: list = [0] * layout.n_buckets
     for leaf, slot in zip(leaves, layout.slots):
         if slot.size:
-            parts[slot.bucket].append(jnp.ravel(leaf))
+            flat = jnp.ravel(leaf)
+            if dtype is not None:
+                flat = flat.astype(dtype)
+            parts[slot.bucket].append(flat)
             filled[slot.bucket] += slot.size
     out = []
-    for bi, (chunks, size, dtype) in enumerate(
+    for bi, (chunks, size, bdtype) in enumerate(
             zip(parts, layout.bucket_sizes, layout.bucket_dtypes)):
+        bdtype = bdtype if dtype is None else np.dtype(dtype)
         pad = size - filled[bi]
         if pad:
-            chunks.append(jnp.zeros((pad,), dtype))
+            chunks.append(jnp.zeros((pad,), bdtype))
         if not chunks:
-            out.append(jnp.zeros((0,), dtype))
+            out.append(jnp.zeros((0,), bdtype))
         elif len(chunks) == 1:
             out.append(chunks[0])
         else:
@@ -199,14 +217,23 @@ def pack(tree, layout: BucketLayout) -> Tuple[jax.Array, ...]:
     return tuple(out)
 
 
-def unpack(buckets: Sequence[jax.Array], layout: BucketLayout):
-    """Exact inverse of :func:`pack` (slices are static)."""
+def unpack(buckets: Sequence[jax.Array], layout: BucketLayout,
+           cast: bool = True):
+    """Exact inverse of :func:`pack` (slices are static).
+
+    ``cast=False`` keeps each leaf in its bucket's dtype instead of the
+    slot's storage dtype — the inverse of ``pack(..., dtype=...)``.
+    """
     leaves = []
     for slot in layout.slots:
         buf = buckets[slot.bucket]
-        flat = jax.lax.slice(buf, (slot.offset,), (slot.offset + slot.size,)) \
-            if slot.size else jnp.zeros((0,), slot.dtype)
-        leaves.append(flat.reshape(slot.shape).astype(slot.dtype))
+        if slot.size:
+            flat = jax.lax.slice(buf, (slot.offset,),
+                                 (slot.offset + slot.size,))
+        else:
+            flat = jnp.zeros((0,), slot.dtype if cast else buf.dtype)
+        flat = flat.reshape(slot.shape)
+        leaves.append(flat.astype(slot.dtype) if cast else flat)
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 

@@ -18,11 +18,9 @@ tree structure into a plan that owns the per-stage link classification,
 per-link-class bucket budgets/layouts, and the wavefront schedule; averagers
 call ``plan.average(tree, phase)`` / ``plan.sync(tree)``.
 
-**Migration note.**  :func:`group_average` and :func:`global_average` below
-are *deprecated thin shims* kept so pre-plan call sites (and the
-differential test suite) keep working: they build a flat single-class
-topology from their kwargs and delegate to a cached compiled plan.  New
-code should do
+**Migration note.**  The deprecated kwarg shims (:func:`group_average`,
+:func:`global_average`, :func:`resolve_bucket_bytes`) completed their
+deprecation cycle and are now **hard errors** pointing at the plan API:
 
     from repro.core import plan
     topo = plan.Topology.flat(axis_names, axis_sizes)        # or .hierarchical
@@ -31,22 +29,22 @@ code should do
 
 What legitimately stays here: the minor-to-major dp-axis layout helper, the
 stacked single-process simulator (shared group math, used by tests and the
-convergence benchmarks), and the classic single-class alpha-beta(-gamma)
-collective cost model (the per-link-class model lives in ``plan``).
+convergence benchmarks), the classic single-class alpha-beta(-gamma)
+collective cost model (the per-link-class model lives in ``plan``), and the
+re-exported constants (``DEFAULT_ALPHA``/``DEFAULT_BETA``/``DEFAULT_GAMMA``,
+``butterfly_exchange``).
 """
 
 from __future__ import annotations
 
-import warnings
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bucketing, grouping
+from repro.core import grouping
 from repro.core import overlap as pipeline
-from repro.core import plan as plan_mod
 from repro.core.plan import (DEFAULT_ALPHA, DEFAULT_BETA, DEFAULT_GAMMA,
                              butterfly_exchange)
 
@@ -70,90 +68,40 @@ def dp_axis_layout(mesh_axis_names: Sequence[str], mesh_shape: dict,
 
 
 # ---------------------------------------------------------------------------
-# DEPRECATED kwarg shims — delegate to a compiled flat-topology plan
+# REMOVED kwarg shims — hard errors pointing at the plan API
 # ---------------------------------------------------------------------------
 
-def _shim_plan(tree, *, S: int, axis_names, axis_sizes, average_dtype,
-               fused: bool, bucket_bytes, use_pallas, overlap: bool,
-               tau: int) -> plan_mod.AveragingPlan:
-    topo = plan_mod.Topology.flat(tuple(axis_names), tuple(axis_sizes))
-    cfg = plan_mod.AveragingConfig(
-        group_size=S, tau=tau,
-        average_dtype=(None if average_dtype is None
-                       else np.dtype(average_dtype).name),
-        fused=fused, bucket_bytes=bucket_bytes, use_pallas=use_pallas,
-        overlap=overlap)
-    return plan_mod.compile_plan(topo, tree, cfg)
+_PLAN_POINTER = (
+    "compile an AveragingPlan instead:\n"
+    "    from repro.core import plan\n"
+    "    topo = plan.Topology.flat(axis_names, axis_sizes)  # or .hierarchical\n"
+    "    p = plan.compile_plan(topo, tree, plan.AveragingConfig(group_size=S))\n"
+    "    p.average(tree, phase) / p.average_offset(tree, offset) / "
+    "p.sync(tree)   # inside shard_map\n"
+    "(every former kwarg is an AveragingConfig field or a Topology property; "
+    "see README.md 'Migration note')")
 
 
-def resolve_bucket_bytes(tree, bucket_bytes: Optional[int], *, P: int,
-                         S: int, tau: int = 10) -> int:
-    """DEPRECATED: ``None`` -> the modeled-optimal single-class budget.
-
-    Kept for pre-plan callers; plans resolve one budget *per link class*
-    at compile time (``plan.choose_class_bucket_bytes``).
+def group_average(*args, **kwargs):
+    """REMOVED: the ``group_average(offset=..., P=..., S=..., ...)`` kwarg
+    entry point went through a deprecation cycle and is now a hard error.
+    Use ``plan.compile_plan(...)`` + ``plan.average_offset(tree, offset)``.
     """
-    if bucket_bytes is not None:
-        return bucket_bytes
-    return plan_mod.choose_class_bucket_bytes(
-        bucketing.tree_payload_bytes(tree), plan_mod.DEFAULT_LINK)
+    raise RuntimeError("group_allreduce.group_average was removed; "
+                       + _PLAN_POINTER)
 
 
-def group_average(tree, *, offset: int, P: int, S: int,
-                  axis_names: Sequence[str], axis_sizes: Sequence[int],
-                  average_dtype=None, fused: bool = True,
-                  bucket_bytes: Optional[int] = None,
-                  use_pallas: Optional[bool] = None,
-                  overlap: bool = True, tau: int = 10):
-    """DEPRECATED shim: group model averaging via a compiled flat plan.
-
-    Group averaging over groups of size S (paper Alg. 2 line 9+11); must be
-    called inside shard_map manual over ``axis_names``.  Every kwarg maps
-    onto :class:`plan.AveragingConfig` (``fused``/``use_pallas``/``overlap``/
-    ``bucket_bytes``/``average_dtype``/``tau``) over a single-link-class
-    :meth:`plan.Topology.flat`; the call delegates to
-    ``plan.average_offset(tree, offset)``.  All plan realisations order each
-    element's arithmetic identically — log2(S) adds then one scale — so
-    per-leaf, serial-bucketed, and overlapped paths agree bit-for-bit under
-    fp32 accumulation (pinned by tests on every phase offset).
-
-    Use :func:`plan.compile_plan` directly for new code — it exposes the
-    same knobs once, plus hierarchical (multi-link-class) topologies.
-    """
-    warnings.warn(
-        "group_average(...) is deprecated; compile an AveragingPlan "
-        "(repro.core.plan.compile_plan) and call plan.average(tree, phase)",
-        DeprecationWarning, stacklevel=2)
-    p = _shim_plan(tree, S=S, axis_names=axis_names, axis_sizes=axis_sizes,
-                   average_dtype=average_dtype, fused=fused,
-                   bucket_bytes=bucket_bytes, use_pallas=use_pallas,
-                   overlap=overlap, tau=tau)
-    if p.P != P:
-        raise ValueError(f"P={P} does not match axis_sizes {axis_sizes}")
-    return p.average_offset(tree, offset)
+def global_average(*args, **kwargs):
+    """REMOVED: use ``plan.compile_plan(...)`` + ``plan.sync(tree)``."""
+    raise RuntimeError("group_allreduce.global_average was removed; "
+                       + _PLAN_POINTER)
 
 
-def global_average(tree, axis_names: Sequence[str], *, fused: bool = True,
-                   bucket_bytes: Optional[int] = None,
-                   axis_sizes: Optional[Sequence[int]] = None):
-    """DEPRECATED shim: tau-periodic synchronous allreduce mean (line 16).
-
-    Delegates to ``plan.sync(tree)`` on a flat topology.  ``axis_sizes`` is
-    only needed to build the topology; legacy callers that omit it get a
-    size-agnostic stand-in (sync never permutes, so only the axis *names*
-    reach the collective).
-    """
-    warnings.warn(
-        "global_average(...) is deprecated; compile an AveragingPlan and "
-        "call plan.sync(tree)", DeprecationWarning, stacklevel=2)
-    names = tuple(axis_names)
-    sizes = tuple(axis_sizes) if axis_sizes is not None \
-        else (1,) * len(names)
-    p = _shim_plan(tree, S=None, axis_names=names, axis_sizes=sizes,
-                   average_dtype="float32", fused=fused,
-                   bucket_bytes=bucket_bytes, use_pallas=None, overlap=True,
-                   tau=10)
-    return p.sync(tree)
+def resolve_bucket_bytes(*args, **kwargs):
+    """REMOVED: plans resolve one budget per link class at compile time
+    (``plan.choose_class_bucket_bytes``)."""
+    raise RuntimeError("group_allreduce.resolve_bucket_bytes was removed; "
+                       + _PLAN_POINTER)
 
 
 # ---------------------------------------------------------------------------

@@ -35,10 +35,16 @@ stage order, then one scale — so the plan path stays bit-identical to the
 per-leaf reference and the stacked simulator under fp32 accumulation, for
 any topology (pinned by tests/test_plan.py on every phase offset).
 
-Migration note: ``group_allreduce.group_average(...)`` and the ``fused=/
-bucket_bytes=/overlap=`` averager kwargs survive as deprecated shims that
-build a flat single-class topology and delegate here.  New code should
-construct a :class:`Topology` and hold the plan.
+Migration note: the ``group_allreduce.group_average(...)`` kwarg shims
+completed their deprecation cycle and are now hard errors; construct a
+:class:`Topology` and hold the plan.
+
+Sharded replicas (DESIGN.md §10): ``compile_plan(..., sharding=
+ShardingPolicy.fsdp_within_pod(axis))`` compiles the FSDP-within-pod
+realisation — the state is the plan's shard-aligned bucket buffers, the
+butterfly runs pod-to-pod on each device's shard slice, and
+``shard_tree``/``unshard_tree``/``grad_shards`` provide the intra-pod
+gather/scatter collectives the train step composes around it.
 """
 
 from __future__ import annotations
@@ -54,6 +60,7 @@ import numpy as np
 
 from repro.core import bucketing, grouping
 from repro.core import overlap as pipeline
+from repro.core.replica import REPLICATED, ShardingPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +171,23 @@ class Topology:
     def bottleneck(self) -> LinkClass:
         """The slowest-wire class — what a global collective is bound by."""
         return max(self.link_classes, key=lambda l: l.beta)
+
+    def drop_axis(self, name: str) -> "Topology":
+        """This topology minus one dp axis (the FSDP shard axis).
+
+        The remaining axes keep their minor-to-major order and their link
+        classes; the result is the *effective* (pod-level) replica space a
+        sharded plan butterflies over.
+        """
+        if name not in self.axis_names:
+            raise ValueError(f"axis {name!r} not in {self.axis_names}")
+        keep = [i for i, a in enumerate(self.axis_names) if a != name]
+        if not keep:
+            raise ValueError("cannot drop the only dp axis")
+        return Topology(tuple(self.axis_names[i] for i in keep),
+                        tuple(self.axis_sizes[i] for i in keep),
+                        self.link_classes,
+                        tuple(self.axis_class[i] for i in keep))
 
     def classes_in_use(self) -> Tuple[int, ...]:
         return tuple(sorted(set(self.axis_class)))
@@ -325,6 +349,78 @@ def modeled_wagma_step_seconds(payload_bytes: int, topology: Topology,
     }
 
 
+def modeled_fsdp_step_seconds(payload_bytes: int, topology: Topology,
+                              S: int, *, shard_axis: str, tau: int = 10,
+                              overlap: bool = True,
+                              bucket_bytes: Optional[int] = None) -> dict:
+    """Tau-amortised step model for FSDP-within-pod sharded replicas.
+
+    Group term: the pod-to-pod butterfly moves only each device's shard
+    slice, so every stage's wire/combine payload is ``payload / pod_size``
+    (launch count per stage is unchanged — one ppermute per bucket).
+    Gather/scatter term: every step additionally pays the per-bucket
+    parameter all-gather (fwd/bwd) and gradient reduce-scatter on the
+    shard (ICI) link class — ``(k-1)/k x payload`` wire each way.  Sync
+    term: bottleneck-class ring on the shard slice.
+    """
+    ax = topology.axis_names.index(shard_axis)
+    k = topology.axis_sizes[ax]
+    shard_link = topology.link_classes[topology.axis_class[ax]]
+    eff = topology.drop_axis(shard_axis)
+    payload = max(int(payload_bytes), 1)
+    slice_payload = payload / k
+
+    per_class = {}
+    for ci in eff.classes_in_use():
+        link = topology.link_classes[ci]
+        budget = bucket_bytes if bucket_bytes is not None else \
+            choose_class_bucket_bytes(payload, link, overlap=overlap)
+        n_buckets = max(1, -(-payload // budget))
+        per_class[ci] = {
+            "link": link.name, "bucket_bytes": budget,
+            "n_buckets": n_buckets,
+            "stage_s": class_stage_seconds(slice_payload, link, n_buckets,
+                                           overlap=overlap),
+        }
+    group_times = []
+    for off in grouping.distinct_offsets(eff.P, S):
+        t = 0.0
+        for bit in grouping.mask_bits_for_offset(eff.P, S, off):
+            t += per_class[eff.class_of_bit(bit)]["stage_s"]
+        group_times.append(t)
+    group_s = float(np.mean(group_times)) if group_times else 0.0
+
+    # the implemented step gathers per shard-layout bucket, and the shard
+    # layout is sized at the butterfly (bottleneck-of-effective) class's
+    # budget (AveragingPlan.shard_bucket_bytes) — price the AG/RS alpha
+    # term at the same launch count the compiled step actually executes
+    butterfly_link = max((topology.link_classes[ci]
+                          for ci in eff.classes_in_use()),
+                         key=lambda l: l.beta)
+    ag_budget = bucket_bytes if bucket_bytes is not None else \
+        choose_class_bucket_bytes(payload, butterfly_link, overlap=overlap)
+    n_ag_buckets = max(1, -(-payload // ag_budget))
+    gs_wire = payload * (k - 1) / k * shard_link.beta
+    gather_scatter_s = 2 * (n_ag_buckets * shard_link.alpha + gs_wire)
+
+    bn = eff.bottleneck()
+    sync_budget = bucket_bytes if bucket_bytes is not None \
+        else bucketing.DEFAULT_BUCKET_BYTES
+    sync_s = ring_sync_seconds(slice_payload, eff.P, bn,
+                               max(1, -(-payload // sync_budget)))
+    step_s = ((tau - 1) * group_s + sync_s) / max(tau, 1) + gather_scatter_s
+    return {
+        "payload_bytes": payload, "P": topology.P, "P_eff": eff.P,
+        "pod_size": k, "S": S, "tau": tau, "overlap": overlap,
+        "shard_axis": shard_axis, "shard_link": shard_link.name,
+        "group_s": group_s, "sync_s": sync_s,
+        "gather_scatter_s": gather_scatter_s, "step_s": step_s,
+        "per_class": {v["link"]: {kk: v[kk] for kk in
+                                  ("bucket_bytes", "n_buckets", "stage_s")}
+                      for v in per_class.values()},
+    }
+
+
 # ---------------------------------------------------------------------------
 # Combine kernels (moved from group_allreduce)
 # ---------------------------------------------------------------------------
@@ -390,23 +486,53 @@ class AveragingPlan:
     """
 
     def __init__(self, topology: Topology, cfg: AveragingConfig,
-                 storage_struct, work_struct, payload_bytes: int):
+                 storage_struct, work_struct, payload_bytes: int,
+                 sharding: ShardingPolicy = REPLICATED):
         self.topology = topology
         self.cfg = cfg
+        self.sharding = sharding
         self.P = topology.P
-        self.S = cfg.group_size or grouping.default_group_size(self.P)
-        if self.S > self.P:
-            raise ValueError(f"group size {self.S} exceeds dp world {self.P}")
+        # Sharded plans butterfly over the *effective* (pod-level) replica
+        # space: the shard axis's ranks share weights and act as ONE
+        # logical WAGMA worker (DESIGN.md §10).
+        if sharding.is_sharded:
+            if sharding.shard_axis not in topology.axis_names:
+                raise ValueError(
+                    f"shard_axis {sharding.shard_axis!r} not a dp axis of "
+                    f"{topology.axis_names}")
+            self.shard_axis_index = topology.axis_names.index(
+                sharding.shard_axis)
+            self.shard_size = topology.axis_sizes[self.shard_axis_index]
+            shard_link = topology.link_classes[
+                topology.axis_class[self.shard_axis_index]]
+            if len(topology.classes_in_use()) > 1 and \
+                    shard_link.beta >= topology.bottleneck().beta:
+                raise ValueError(
+                    f"shard_axis {sharding.shard_axis!r} rides the "
+                    f"bottleneck link class {shard_link.name!r}; FSDP "
+                    "shards over an intra-pod (ICI) axis")
+            self.eff_topology = topology.drop_axis(sharding.shard_axis)
+        else:
+            self.shard_axis_index = None
+            self.shard_size = 1
+            self.eff_topology = topology
+        self.P_eff = self.eff_topology.P
+        self.S = cfg.group_size or grouping.default_group_size(self.P_eff)
+        if self.S > self.P_eff:
+            raise ValueError(f"group size {self.S} exceeds replica world "
+                             f"{self.P_eff}")
         self.avg_dtype = (None if cfg.average_dtype is None
                           else np.dtype(cfg.average_dtype))
         if cfg.dynamic_groups:
             self.offsets: Tuple[int, ...] = grouping.distinct_offsets(
-                self.P, self.S)
+                self.P_eff, self.S)
         else:
             self.offsets = (0,)
         self.storage_struct = storage_struct    # SDS tree, storage dtypes
         self.work_struct = work_struct          # SDS tree, accumulation dtype
         self.payload_bytes = payload_bytes      # bytes of the work tree
+        self.storage_payload_bytes = bucketing.tree_payload_bytes(
+            storage_struct)
         # per-class budgets, resolved once at compile time
         self.class_bucket_bytes: Dict[int, int] = {}
         for ci in topology.classes_in_use():
@@ -419,6 +545,7 @@ class AveragingPlan:
         self.sync_bucket_bytes = (cfg.bucket_bytes
                                   or bucketing.DEFAULT_BUCKET_BYTES)
         self._runs: Dict[int, Tuple[StageRun, ...]] = {}
+        self._shard_layout: Optional[bucketing.BucketLayout] = None
 
     # -- static schedule ---------------------------------------------------
     @property
@@ -426,14 +553,19 @@ class AveragingPlan:
         return len(self.offsets)
 
     def runs_for_offset(self, offset: int) -> Tuple[StageRun, ...]:
-        """The offset's stages as maximal runs of equal link class."""
+        """The offset's stages as maximal runs of equal link class.
+
+        Bits live in the *effective* replica rank space — identical to the
+        full dp space for replicated plans; the pod-level space (shard
+        axis dropped) for sharded plans.
+        """
         cached = self._runs.get(offset)
         if cached is not None:
             return cached
-        bits = grouping.mask_bits_for_offset(self.P, self.S, offset)
+        bits = grouping.mask_bits_for_offset(self.P_eff, self.S, offset)
         runs: List[StageRun] = []
         for bit in bits:
-            ci = self.topology.class_of_bit(bit)
+            ci = self.eff_topology.class_of_bit(bit)
             if runs and runs[-1].class_index == ci:
                 runs[-1] = StageRun(ci, runs[-1].bits + (bit,))
             else:
@@ -447,14 +579,146 @@ class AveragingPlan:
             self.work_struct,
             max_bucket_bytes=self.class_bucket_bytes[class_index])
 
+    # -- sharded-state layout (ShardingPolicy.fsdp_within_pod) -------------
+    @property
+    def shard_layout(self) -> bucketing.BucketLayout:
+        """Storage-dtype bucket layout the sharded state persists in.
+
+        Every bucket is padded to shard_size x 128 elements so each device
+        owns an equal, lane-aligned contiguous slice.  One layout serves
+        storage, the fwd/bwd all-gather, the grad reduce-scatter, and the
+        pod-to-pod butterfly (class budgets degenerate to the butterfly
+        link class's budget under sharding — the stage bits all ride the
+        non-shard axes, so there is no intra-butterfly repack).
+        """
+        if not self.sharding.is_sharded:
+            raise ValueError("shard_layout is only defined for sharded plans")
+        if self._shard_layout is None:
+            self._shard_layout = bucketing.layout_for(
+                self.storage_struct,
+                max_bucket_bytes=self.shard_bucket_bytes,
+                align=self.shard_size)
+        return self._shard_layout
+
+    @property
+    def shard_bucket_bytes(self) -> int:
+        """The sharded state's bucket budget: the butterfly link class's."""
+        if self.cfg.bucket_bytes is not None:
+            return self.cfg.bucket_bytes
+        eff_classes = self.eff_topology.classes_in_use()
+        link_ci = max(eff_classes,
+                      key=lambda ci: self.topology.link_classes[ci].beta)
+        return self.class_bucket_bytes[link_ci]
+
+    def shard_struct(self) -> tuple:
+        """ShapeDtypeStructs of one device's owned shard slices."""
+        lay = self.shard_layout
+        return tuple(
+            jax.ShapeDtypeStruct((s // self.shard_size,), d)
+            for s, d in zip(lay.bucket_sizes, lay.bucket_dtypes))
+
+    def shard_tree(self, tree) -> tuple:
+        """Full local tree -> this device's owned shard slices.
+
+        Must run inside shard_map (manual over the dp axes): packs into the
+        shard layout and takes the ``axis_index(shard_axis)``-th slice of
+        every bucket.
+        """
+        idx = jax.lax.axis_index(self.sharding.shard_axis)
+        out = []
+        for buf in bucketing.pack(tree, self.shard_layout):
+            n = buf.shape[0] // self.shard_size
+            out.append(jax.lax.dynamic_slice(buf, (idx * n,), (n,))
+                       if n else buf)
+        return tuple(out)
+
+    def unshard_tree(self, shards) -> object:
+        """Owned shard slices -> the full local tree (all-gather on ICI).
+
+        One tiled all-gather per bucket over the shard axis — the
+        forward/backward parameter gather of the FSDP-within-pod step.
+        """
+        ax = self.sharding.shard_axis
+        bufs = tuple(
+            jax.lax.all_gather(b, ax, tiled=True) if b.size else
+            jnp.zeros((0,), b.dtype) for b in shards)
+        return bucketing.unpack(bufs, self.shard_layout)
+
+    def grad_shards(self, grad_tree) -> tuple:
+        """Full-tree gradients -> owned fp32 grad slices (pod mean).
+
+        One tiled ``psum_scatter`` per bucket over the shard axis, scaled
+        by 1/shard_size: pod members form one logical worker whose
+        gradient is the mean over members, and each device keeps only the
+        slice its optimiser shard needs.
+        """
+        ax = self.sharding.shard_axis
+        inv = 1.0 / self.shard_size
+        out = []
+        for buf in bucketing.pack(grad_tree, self.shard_layout,
+                                  dtype=jnp.float32):
+            if buf.size:
+                buf = jax.lax.psum_scatter(buf, ax, scatter_dimension=0,
+                                           tiled=True) * inv
+            out.append(buf)
+        return tuple(out)
+
     # -- execution: the paper's group butterfly ----------------------------
     def average(self, tree, phase: int):
-        """Wait-avoiding group model averaging for compiled phase ``phase``."""
+        """Wait-avoiding group model averaging for compiled phase ``phase``.
+
+        Replicated plans take (and return) the local params pytree; sharded
+        plans take the tuple of owned shard-slice buffers and butterfly
+        them pod-to-pod directly (each device exchanges only its slice).
+        """
         return self.average_offset(tree, self.offsets[phase])
 
+    def _cast_shards(self, shards):
+        if self.avg_dtype is None:
+            return list(shards)
+        return [b.astype(self.avg_dtype) if b.size else b for b in shards]
+
+    def _uncast_shards(self, work, shards):
+        return tuple(w.astype(b.dtype) for w, b in zip(work, shards))
+
+    def _average_sharded(self, shards, offset: int):
+        """Pod-to-pod butterfly on the shard-slice buffers.
+
+        Per element the arithmetic is exactly the replicated reference's —
+        log2(S) adds in stage order, then one scale — applied to each
+        device's slice, so the sharded path stays bit-identical to the
+        replicated plan and the stacked simulator (tests/test_replica.py).
+        """
+        bits = grouping.mask_bits_for_offset(self.P_eff, self.S, offset)
+        inv_s = 1.0 / self.S
+        exchange = lambda buf, bit: butterfly_exchange(
+            buf, bit, self.eff_topology.axis_names,
+            self.eff_topology.axis_sizes)
+        pallas = True if self.cfg.use_pallas is None else self.cfg.use_pallas
+        work = self._cast_shards(shards)
+        if self.cfg.overlap:
+            work = pipeline.overlapped_butterfly(
+                work, bits, inv_s, exchange=exchange,
+                combine_many=lambda a, r, s: _combine_many(a, r, s, pallas))
+        else:
+            out = []
+            for buf in work:
+                if not buf.size:
+                    out.append(buf)
+                    continue
+                for i, bit in enumerate(bits):
+                    recv = exchange(buf, bit)
+                    s = inv_s if i == len(bits) - 1 else 1.0
+                    buf = _stage_combine(buf, recv, s, pallas)
+                out.append(buf)
+            work = out
+        return self._uncast_shards(work, shards)
+
     def average_offset(self, tree, offset: int):
-        """Group averaging for an explicit phase offset (shim entry)."""
-        bits = grouping.mask_bits_for_offset(self.P, self.S, offset)
+        """Group averaging for an explicit phase offset."""
+        if self.sharding.is_sharded:
+            return self._average_sharded(tree, offset)
+        bits = grouping.mask_bits_for_offset(self.P_eff, self.S, offset)
         inv_s = 1.0 / self.S
         exchange = lambda buf, bit: butterfly_exchange(
             buf, bit, self.topology.axis_names, self.topology.axis_sizes)
@@ -507,7 +771,17 @@ class AveragingPlan:
 
     # -- execution: tau-periodic global sync -------------------------------
     def sync(self, tree):
-        """Synchronous allreduce mean over all dp replicas (Alg. 2 line 16)."""
+        """Synchronous allreduce mean over all replicas (Alg. 2 line 16).
+
+        Sharded plans pmean the shard-slice buffers over the *effective*
+        (pod) axes only — shard-axis neighbours hold different slices, not
+        divergent copies, so they are never averaged.
+        """
+        if self.sharding.is_sharded:
+            names = self.eff_topology.axis_names
+            return tuple(
+                jax.lax.pmean(b.astype(jnp.float32), names).astype(b.dtype)
+                if b.size else b for b in tree)
         names = self.topology.axis_names
         if not self.cfg.fused:
             return jax.tree.map(
@@ -529,11 +803,11 @@ class AveragingPlan:
         if self.cfg.bucket_bytes is not None:
             return self.cfg.bucket_bytes
         if bits:
-            classes = {self.topology.class_of_bit(b) for b in bits}
+            classes = {self.eff_topology.class_of_bit(b) for b in bits}
             link = max((self.topology.link_classes[c] for c in classes),
                        key=lambda l: l.beta)
         else:
-            link = self.topology.bottleneck()
+            link = self.eff_topology.bottleneck()
         return choose_class_bucket_bytes(self.payload_bytes, link,
                                          overlap=self.cfg.overlap)
 
@@ -547,8 +821,19 @@ class AveragingPlan:
         granularities compute identical element math.  With ``overlap=True``
         every bucket's collectives are issued before any bucket's combine
         (core/overlap.py single-stage pipeline).
+
+        Sharded plans run the mix directly on the shard-slice buffers
+        (``bits`` are effective/pod-space bits; the issue half must ride
+        the non-shard axes only — the averagers guarantee that).
         """
         mixfn = lambda buf: combine(buf, issue(buf))
+        if self.sharding.is_sharded:
+            work = [b.astype(jnp.float32) if b.size else b for b in tree]
+            if self.cfg.overlap:
+                out = pipeline.overlapped_mix(work, issue, combine)
+            else:
+                out = [mixfn(b) if b.size else b for b in work]
+            return tuple(o.astype(b.dtype) for o, b in zip(out, tree))
         if not self.cfg.fused:
             return jax.tree.map(
                 lambda w: mixfn(w.astype(jnp.float32)).astype(w.dtype), tree)
@@ -563,30 +848,44 @@ class AveragingPlan:
 
     # -- stacked-simulator twins (single process, leading replica axis) ----
     def average_stacked(self, stacked_tree, *, t: int):
+        """Simulator twin over the logical replica axis (P_eff rows)."""
         from repro.core import group_allreduce as ga
-        return ga.group_average_stacked(stacked_tree, P=self.P, S=self.S, t=t)
+        return ga.group_average_stacked(stacked_tree, P=self.P_eff,
+                                        S=self.S, t=t)
 
     def sync_stacked(self, stacked_tree):
         from repro.core import group_allreduce as ga
-        return ga.global_average_stacked(stacked_tree, P=self.P)
+        return ga.global_average_stacked(stacked_tree, P=self.P_eff)
 
     # -- accounting / analysis ---------------------------------------------
     def n_leaves(self) -> int:
         return len(jax.tree_util.tree_leaves(self.work_struct))
 
     def butterfly_summary(self, offset: int = 0) -> List[dict]:
-        """One dict per stage run: link class, bits, budget, launch count."""
+        """One dict per stage run: link class, bits, budget, launch count.
+
+        Sharding never changes the launch count per stage — the sharded
+        butterfly runs one ppermute per shard-layout bucket, not per
+        (bucket x shard) — so under FSDP every class reports the shard
+        layout's bucket count.
+        """
         out = []
         for run in self.runs_for_offset(offset):
             link = self.topology.link_classes[run.class_index]
-            units = (self.class_layout(run.class_index).n_buckets
-                     if self.cfg.fused else self.n_leaves())
+            if self.sharding.is_sharded:
+                units = self.shard_layout.n_buckets
+                budget = self.shard_bucket_bytes
+            else:
+                units = (self.class_layout(run.class_index).n_buckets
+                         if self.cfg.fused else self.n_leaves())
+                budget = self.class_bucket_bytes[run.class_index]
             out.append({
                 "link": link.name,
                 "bits": run.bits,
-                "axes": tuple(self.topology.axis_of_bit(b) for b in run.bits),
+                "axes": tuple(self.eff_topology.axis_of_bit(b)
+                              for b in run.bits),
                 "stages": len(run.bits),
-                "bucket_bytes": self.class_bucket_bytes[run.class_index],
+                "bucket_bytes": budget,
                 "n_buckets": units,
                 "ppermutes": len(run.bits) * units,
             })
@@ -625,13 +924,24 @@ class AveragingPlan:
             f"avg_dtype={self.avg_dtype} fused={self.cfg.fused} "
             f"overlap={self.cfg.overlap}",
             f"  topology: {self.topology.describe()}",
+            f"  sharding: {self.sharding.describe()}"
+            + (f" -> {self.P_eff} logical replicas of "
+               f"{self.shard_size} shards" if self.sharding.is_sharded
+               else ""),
         ]
-        for ci in self.topology.classes_in_use():
-            link = self.topology.link_classes[ci]
-            bb = self.class_bucket_bytes[ci]
-            nb = self.class_layout(ci).n_buckets if self.cfg.fused else 0
-            lines.append(f"  class {link.name}: budget "
-                         f"{bb / 2**20:.0f}MiB -> {nb} buckets")
+        if self.sharding.is_sharded:
+            lines.append(
+                f"  shard layout: budget "
+                f"{self.shard_bucket_bytes / 2**20:.0f}MiB -> "
+                f"{self.shard_layout.n_buckets} buckets x "
+                f"{self.shard_size} slices")
+        else:
+            for ci in self.topology.classes_in_use():
+                link = self.topology.link_classes[ci]
+                bb = self.class_bucket_bytes[ci]
+                nb = self.class_layout(ci).n_buckets if self.cfg.fused else 0
+                lines.append(f"  class {link.name}: budget "
+                             f"{bb / 2**20:.0f}MiB -> {nb} buckets")
         for ph, off in enumerate(self.offsets):
             runs = ", ".join(
                 f"{r['link']}[bits={list(r['bits'])} x{r['n_buckets']}buk]"
@@ -647,11 +957,17 @@ class AveragingPlan:
 # ---------------------------------------------------------------------------
 
 _PLAN_CACHE: Dict[tuple, AveragingPlan] = {}
+# Sharded plans are additionally indexed by the *shard-buffer* structure
+# they produce, so averagers handed the sharded state (a tuple of slice
+# buffers) inside the train step resolve back to the plan compiled from
+# the full tree at init time.
+_SHARD_STRUCT_CACHE: Dict[tuple, AveragingPlan] = {}
 
 
 def clear_plan_cache() -> None:
     """Drop compiled plans (and the treedefs they retain) — test hygiene."""
     _PLAN_CACHE.clear()
+    _SHARD_STRUCT_CACHE.clear()
     choose_class_bucket_bytes.cache_clear()
 
 
@@ -669,16 +985,29 @@ def _config_key(cfg: AveragingConfig) -> tuple:
 
 
 def compile_plan(topology: Topology, tree_shapes,
-                 config: AveragingConfig = AveragingConfig()
-                 ) -> AveragingPlan:
+                 config: AveragingConfig = AveragingConfig(),
+                 sharding: ShardingPolicy = REPLICATED) -> AveragingPlan:
     """Compile the collective once for a tree structure on a topology.
 
     ``tree_shapes`` may be concrete arrays, tracers, or ShapeDtypeStructs —
     only structure/shapes/dtypes are read.  Cached on (topology, config,
-    structure): repeated calls from every compiled phase variant return the
-    same plan object, and only the first call derives budgets/layouts.
+    sharding, structure): repeated calls from every compiled phase variant
+    return the same plan object, and only the first call derives
+    budgets/layouts.
+
+    ``sharding`` selects the replica-state realisation the plan executes
+    (DESIGN.md §10): ``ShardingPolicy.fsdp_within_pod(axis)`` compiles the
+    sharded-state plan — ``tree_shapes`` is still the FULL local tree; the
+    plan derives the shard-aligned bucket layout, and subsequent
+    ``compile_plan`` calls that pass the plan's own shard-buffer tuple
+    (the state the train step actually holds) resolve to the same plan.
     """
-    key = (topology, _config_key(config), _structure_key(tree_shapes))
+    skey = (topology, _config_key(config), sharding)
+    if sharding.is_sharded:
+        plan = _SHARD_STRUCT_CACHE.get(skey + (_structure_key(tree_shapes),))
+        if plan is not None:
+            return plan
+    key = skey + (_structure_key(tree_shapes),)
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         return plan
@@ -689,6 +1018,20 @@ def compile_plan(topology: Topology, tree_shapes,
     work = storage if avg is None else jax.tree.map(
         lambda l: jax.ShapeDtypeStruct(l.shape, avg), storage)
     payload = bucketing.tree_payload_bytes(work)
-    plan = AveragingPlan(topology, config, storage, work, payload)
+    plan = AveragingPlan(topology, config, storage, work, payload,
+                         sharding=sharding)
     _PLAN_CACHE[key] = plan
+    if sharding.is_sharded:
+        # register BOTH shard-buffer structures the train step holds: the
+        # storage-dtype param slices and the fp32 gradient slices
+        # (grad_shards packs fp32 buffers of the same shapes), so
+        # plan_for(grads) resolves here instead of silently compiling a
+        # bogus plan that treats the slice tuple as a full model tree
+        _SHARD_STRUCT_CACHE[
+            skey + (_structure_key(plan.shard_struct()),)] = plan
+        grad_struct = tuple(
+            jax.ShapeDtypeStruct(s.shape, np.dtype(np.float32))
+            for s in plan.shard_struct())
+        _SHARD_STRUCT_CACHE.setdefault(
+            skey + (_structure_key(grad_struct),), plan)
     return plan

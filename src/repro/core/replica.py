@@ -1,0 +1,318 @@
+"""Replica state & sharding policy — the object every layer operates on.
+
+DESIGN.md §10.  WAGMA needs *divergent* per-replica weights, which until
+this module meant every dp replica held a full copy of params + optimiser
+state (the §2 memory tension: a fully-sharded replica cannot locally
+average with a partner holding different shards).  The resolution pairs
+the hierarchical Topology (§9) with the Layered-SGD worker structure:
+
+* ``ShardingPolicy.replicated()`` — the legacy layout.  Params/opt carry a
+  leading dp-replica axis of size P_dp; every device holds a full copy.
+* ``ShardingPolicy.fsdp_within_pod(shard_axis)`` — replicas inside a pod
+  *share* weights and shard them ZeRO/FSDP-style over the intra-pod
+  (ICI) mesh axis ``shard_axis``: between averaging steps each device
+  holds only its 1/pod_size slice of every flat bucket (param + opt
+  memory ÷ pod size), the forward/backward all-gathers parameters per
+  bucket on ICI, gradients reduce-scatter back (pod members form ONE
+  logical WAGMA worker whose gradient is the pod mean), the optimiser
+  updates only the owned shard, and group averaging runs pod-to-pod on
+  the shard slices directly (DCN traffic also ÷ pod size).
+
+:class:`ReplicaState` is THE pytree the train step, averager,
+checkpointing, and cost model operate on: ``params``, ``opt_state``, and
+the averager ``step``/``phase`` bookkeeping, in whichever layout the
+policy dictates.  Under ``replicated`` the params are the familiar
+(P_dp, ...)-stacked leaf tree; under ``fsdp_within_pod`` they are a tuple
+of (P_pods, bucket_elems) flat shard buckets laid out by the compiled
+plan's shard-aligned :class:`~repro.core.bucketing.BucketLayout` (every
+bucket is padded to pod_size x 128 elements so each device owns an equal,
+lane-aligned contiguous slice).
+
+Because the per-element arithmetic of every collective is unchanged (the
+butterfly exchanges each shard slice with the same slice in the partner
+pod), the sharded execution stays bit-identical to the replicated
+reference and the stacked simulator on every phase offset — pinned by
+tests/test_replica.py.
+
+Host-side conversion helpers translate whole states between policies
+(checkpoint portability: save from a sharded run, restore into a
+replicated run and vice versa) and consolidate either layout into the
+single post-training consensus model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketing
+
+REPLICATED_KIND = "replicated"
+FSDP_KIND = "fsdp_within_pod"
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Frozen description of how divergent replicas lay out their state.
+
+    ``kind`` is ``"replicated"`` or ``"fsdp_within_pod"``; for the latter,
+    ``shard_axis`` names the dp mesh axis parameters shard over (must be an
+    intra-pod/ICI axis of the plan's Topology — validated at compile time).
+    Part of the plan-compilation cache key, so a plan owns exactly one
+    sharded execution realisation.
+    """
+    kind: str = REPLICATED_KIND
+    shard_axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kind not in (REPLICATED_KIND, FSDP_KIND):
+            raise ValueError(f"unknown sharding kind {self.kind!r}")
+        if self.kind == FSDP_KIND and not self.shard_axis:
+            raise ValueError("fsdp_within_pod needs a shard_axis")
+        if self.kind == REPLICATED_KIND and self.shard_axis is not None:
+            raise ValueError("replicated policy takes no shard_axis")
+
+    @classmethod
+    def replicated(cls) -> "ShardingPolicy":
+        return cls(REPLICATED_KIND)
+
+    @classmethod
+    def fsdp_within_pod(cls, shard_axis: str) -> "ShardingPolicy":
+        return cls(FSDP_KIND, shard_axis)
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.kind == FSDP_KIND
+
+    def describe(self) -> str:
+        if self.is_sharded:
+            return f"fsdp_within_pod(shard_axis={self.shard_axis!r})"
+        return "replicated"
+
+
+REPLICATED = ShardingPolicy.replicated()
+
+
+# ---------------------------------------------------------------------------
+# ReplicaState pytree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ReplicaState:
+    """Params + optimiser state + averager step/phase bookkeeping.
+
+    A plain pytree (all four fields are dynamic leaves/subtrees), so it
+    jits, donates, shards, and checkpoints as one object.  ``step`` is the
+    global training step (int32 scalar, incremented by the train step);
+    ``phase`` records the butterfly phase index the last group-averaging
+    step executed (-1 before any averaging / after a sync) so a restored
+    run can verify its compiled-variant dispatch against the checkpoint.
+    """
+    params: object
+    opt_state: object
+    step: jax.Array
+    phase: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step, self.phase), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, params, opt_state, *, step: int = 0,
+               phase: int = -1) -> "ReplicaState":
+        return cls(params, opt_state, jnp.asarray(step, jnp.int32),
+                   jnp.asarray(phase, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Host-side layout conversion (checkpoint portability, consolidation)
+# ---------------------------------------------------------------------------
+
+def effective_rank_map(axis_sizes: Tuple[int, ...],
+                       shard_axis_index: int) -> np.ndarray:
+    """``eff_of_rank[dp_rank] -> logical (pod) replica index``.
+
+    ``axis_sizes`` is minor-to-major (``dp_axis_layout`` order).  Dropping
+    the shard axis's coordinate from a dp rank's mixed-radix decomposition
+    yields the rank in the effective (pod-level) replica space, with the
+    remaining axes keeping their minor-to-major order.
+    """
+    sizes = [int(s) for s in axis_sizes]
+    P = int(np.prod(sizes))
+    eff = np.zeros((P,), np.int64)
+    for rank in range(P):
+        rem, coords = rank, []
+        for s in sizes:
+            coords.append(rem % s)
+            rem //= s
+        stride, e = 1, 0
+        for ax, (s, c) in enumerate(zip(sizes, coords)):
+            if ax == shard_axis_index:
+                continue
+            e += c * stride
+            stride *= s
+        eff[rank] = e
+    return eff
+
+
+def _pack_rows(stacked_tree, layout, n_rows: int, dtype=None) -> tuple:
+    """(R, ...)-stacked leaves -> tuple of (R, bucket_elems) buffers."""
+    host = jax.tree.map(np.asarray, stacked_tree)    # one transfer, not R
+    rows = []
+    for r in range(n_rows):
+        row_tree = jax.tree.map(lambda a: a[r], host)
+        rows.append(bucketing.pack(row_tree, layout, dtype=dtype))
+    return tuple(jnp.stack([np.asarray(rows[r][b]) for r in range(n_rows)])
+                 for b in range(layout.n_buckets))
+
+
+def _unpack_rows(buffers, layout, cast: bool = True) -> object:
+    """Tuple of (R, bucket_elems) buffers -> (R, ...)-stacked leaves."""
+    host = [np.asarray(b) for b in buffers]          # one transfer, not R
+    n_rows = int(host[0].shape[0]) if host else 0
+    trees = [bucketing.unpack(tuple(b[r] for b in host), layout, cast=cast)
+             for r in range(n_rows)]
+    return jax.tree.map(lambda *ls: jnp.stack([np.asarray(l) for l in ls]),
+                        *trees)
+
+
+def map_opt_state(opt_state, fn_tree, fn_count):
+    """Apply a params-structure conversion to an optimiser state.
+
+    Optimiser states in this repo are NamedTuples whose fields are either
+    params-structured moment trees (``momentum``/``mu``/``nu``) or the
+    per-replica ``count`` vector; the conversion maps each accordingly.
+    """
+    if not hasattr(opt_state, "_fields"):
+        raise TypeError(f"unsupported optimiser state {type(opt_state)}")
+    vals = {f: (fn_count(getattr(opt_state, f)) if f == "count"
+                else fn_tree(getattr(opt_state, f)))
+            for f in opt_state._fields}
+    return type(opt_state)(**vals)
+
+
+def sharded_to_replicated_tree(buffers, plan, *, cast: bool = True):
+    """FSDP bucket buffers (P_pods, bucket) -> (P_dp, ...)-stacked leaves.
+
+    Every pod's model is broadcast to all its members (members of a pod
+    share weights by construction), so the result is a valid replicated
+    state on the same mesh.
+    """
+    pod_tree = _unpack_rows(buffers, plan.shard_layout, cast=cast)
+    eff = effective_rank_map(plan.topology.axis_sizes, plan.shard_axis_index)
+    return jax.tree.map(lambda a: jnp.asarray(np.asarray(a)[eff]), pod_tree)
+
+
+def replicated_to_sharded_tree(stacked_tree, plan, *, dtype=None):
+    """(P_dp, ...)-stacked leaves -> FSDP bucket buffers (P_pods, bucket).
+
+    Pod members are averaged in fp32 (for a checkpoint written by a
+    replicated run mid-divergence this is the pod-consensus projection;
+    when members are identical — e.g. right after a sync or an FSDP->
+    replicated conversion — the mean is exact and the round trip is
+    lossless).
+    """
+    eff = effective_rank_map(plan.topology.axis_sizes, plan.shard_axis_index)
+    n_eff = plan.P_eff
+
+    def pod_mean(a):
+        a = np.asarray(a)
+        out = []
+        for e in range(n_eff):
+            members = a[eff == e].astype(np.float32)
+            out.append(members.mean(axis=0).astype(a.dtype))
+        return jnp.asarray(np.stack(out))
+
+    pod_tree = jax.tree.map(pod_mean, stacked_tree)
+    return _pack_rows(pod_tree, plan.shard_layout, n_eff, dtype=dtype)
+
+
+def fsdp_to_replicated_state(state: ReplicaState, plan) -> ReplicaState:
+    """Convert a whole FSDP ReplicaState into the replicated layout."""
+    eff = effective_rank_map(plan.topology.axis_sizes, plan.shard_axis_index)
+    params = sharded_to_replicated_tree(state.params, plan)
+    opt = map_opt_state(
+        state.opt_state,
+        lambda t: sharded_to_replicated_tree(t, plan, cast=False),
+        lambda c: jnp.asarray(np.asarray(c)[eff]))
+    return ReplicaState(params, opt, state.step, state.phase)
+
+
+def replicated_to_fsdp_state(state: ReplicaState, plan) -> ReplicaState:
+    """Convert a whole replicated ReplicaState into the FSDP layout."""
+    eff = effective_rank_map(plan.topology.axis_sizes, plan.shard_axis_index)
+    first_member = np.asarray(
+        [int(np.nonzero(eff == e)[0][0]) for e in range(plan.P_eff)])
+    params = replicated_to_sharded_tree(state.params, plan)
+    opt = map_opt_state(
+        state.opt_state,
+        lambda t: replicated_to_sharded_tree(t, plan, dtype=jnp.float32),
+        lambda c: jnp.asarray(np.asarray(c)[first_member]))
+    return ReplicaState(params, opt, state.step, state.phase)
+
+
+def sharded_state_template(plan, opt_state_like) -> ReplicaState:
+    """Abstract ReplicaState in the FSDP layout of ``plan``.
+
+    ``opt_state_like`` supplies the optimiser state *type* (any state of
+    the same optimiser, either layout); only shapes/dtypes are produced —
+    used as the rebuild template for cross-policy checkpoint restore.
+    """
+    lay = plan.shard_layout
+    n = plan.P_eff
+    params = tuple(jax.ShapeDtypeStruct((n, s), d)
+                   for s, d in zip(lay.bucket_sizes, lay.bucket_dtypes))
+    moments = tuple(jax.ShapeDtypeStruct((n, s), np.dtype(np.float32))
+                    for s in lay.bucket_sizes)
+    opt = map_opt_state(
+        opt_state_like, lambda _: moments,
+        lambda c: jax.ShapeDtypeStruct((n,), np.dtype(c.dtype)))
+    return ReplicaState(params, opt,
+                        jax.ShapeDtypeStruct((), np.dtype(np.int32)),
+                        jax.ShapeDtypeStruct((), np.dtype(np.int32)))
+
+
+def replicated_state_template(plan, opt_state_like) -> ReplicaState:
+    """Abstract ReplicaState in the replicated (P_dp, ...)-stacked layout."""
+    n = plan.P
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype),
+        plan.storage_struct)
+    moments = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape),
+                                       np.dtype(np.float32)),
+        plan.storage_struct)
+    opt = map_opt_state(
+        opt_state_like, lambda _: moments,
+        lambda c: jax.ShapeDtypeStruct((n,), np.dtype(c.dtype)))
+    return ReplicaState(params, opt,
+                        jax.ShapeDtypeStruct((), np.dtype(np.int32)),
+                        jax.ShapeDtypeStruct((), np.dtype(np.int32)))
+
+
+def consolidate_state(state: ReplicaState, plan=None):
+    """Average the replica axis -> the single post-training consensus model.
+
+    Replicated states need no plan; FSDP states unpack through the plan's
+    shard layout after averaging the pod axis.
+    """
+    from repro.checkpoint.ckpt import consolidate
+    if plan is not None and plan.sharding.is_sharded and \
+            isinstance(state.params, tuple):
+        mean_bufs = tuple(
+            jnp.mean(jnp.asarray(b, jnp.float32), axis=0).astype(b.dtype)
+            for b in state.params)
+        return bucketing.unpack(mean_bufs, plan.shard_layout)
+    if isinstance(state.params, tuple):
+        raise ValueError(
+            "consolidate_state got an FSDP (shard-buffer) state but no "
+            "sharded plan to unpack it through; pass the compiled plan")
+    return consolidate(state.params)

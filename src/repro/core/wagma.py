@@ -32,6 +32,7 @@ from typing import Optional, Sequence
 
 from repro.core import group_allreduce, grouping
 from repro.core import plan as plan_mod
+from repro.core.replica import REPLICATED, ShardingPolicy
 
 # Backwards-compatible alias: WagmaConfig(group_size=..., tau=..., fused=...)
 # is the plan's compilation config.
@@ -46,7 +47,8 @@ class WagmaAverager:
 
     def __init__(self, dp_axis_names: Sequence[str], dp_axis_sizes: Sequence[int],
                  cfg: WagmaConfig = WagmaConfig(),
-                 topology: Optional[plan_mod.Topology] = None):
+                 topology: Optional[plan_mod.Topology] = None,
+                 sharding: ShardingPolicy = REPLICATED):
         # minor-to-major layout (see group_allreduce.dp_axis_layout)
         self.axis_names = tuple(dp_axis_names)
         self.axis_sizes = tuple(int(s) for s in dp_axis_sizes)
@@ -58,13 +60,22 @@ class WagmaAverager:
                 f"topology axes {topology.axis_names}/{topology.axis_sizes} "
                 f"do not match dp axes {self.axis_names}/{self.axis_sizes}")
         self.topology = topology
+        self.sharding = sharding
         self.P = topology.P
-        self.S = cfg.group_size or grouping.default_group_size(self.P)
-        if self.S > self.P:
-            raise ValueError(f"group size {self.S} exceeds dp world {self.P}")
+        # Under fsdp_within_pod the shard axis's ranks share weights and
+        # act as one logical WAGMA worker: grouping runs over the
+        # effective (pod-level) replica space (DESIGN.md §10).
+        if sharding.is_sharded:
+            self.P_eff = topology.drop_axis(sharding.shard_axis).P
+        else:
+            self.P_eff = self.P
+        self.S = cfg.group_size or grouping.default_group_size(self.P_eff)
+        if self.S > self.P_eff:
+            raise ValueError(f"group size {self.S} exceeds replica world "
+                             f"{self.P_eff}")
         self.cfg = cfg
         if cfg.dynamic_groups:
-            self.offsets = grouping.distinct_offsets(self.P, self.S)
+            self.offsets = grouping.distinct_offsets(self.P_eff, self.S)
         else:
             self.offsets = (0,)   # ablation 2: fixed groups
 
@@ -76,15 +87,23 @@ class WagmaAverager:
     def phase_for_step(self, t: int) -> int:
         if not self.cfg.dynamic_groups:
             return 0
-        return self.offsets.index(grouping.phase_offset(self.P, self.S, t))
+        return self.offsets.index(
+            grouping.phase_offset(self.P_eff, self.S, t))
 
     def sync_due(self, t: int) -> bool:
         return (t + 1) % self.cfg.tau == 0
 
     # -- the compiled plan --------------------------------------------------
     def plan_for(self, tree) -> plan_mod.AveragingPlan:
-        """The compiled plan for this tree structure (cached by compile)."""
-        return plan_mod.compile_plan(self.topology, tree, self.cfg)
+        """The compiled plan for this tree structure (cached by compile).
+
+        Under ``fsdp_within_pod``, ``tree`` may be either the FULL local
+        tree (first compile, at state-init time) or the plan's own
+        shard-buffer tuple (inside the train step) — ``compile_plan``
+        resolves the latter through its shard-structure registry.
+        """
+        return plan_mod.compile_plan(self.topology, tree, self.cfg,
+                                     self.sharding)
 
     # -- collective bodies (call inside shard_map, manual over dp axes) ---
     def comm(self, tree, phase: int):

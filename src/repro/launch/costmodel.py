@@ -264,6 +264,33 @@ class CommReport:
     t_hierarchical: float = 0.0   # per-class budgets, per-class constants
     t_hierarchical_flat_budget: float = 0.0  # same topology, one 32MiB budget
     hierarchical_budget_win: float = 1.0     # flat_budget / per-class
+    # FSDP-within-pod sharded replicas (DESIGN.md §10): per-device memory
+    # and the per-step gather/scatter overhead the sharding buys it with
+    mem_replicated: float = 0.0       # persistent param+opt bytes/device
+    mem_fsdp_within_pod: float = 0.0  # same, sharded over the pod
+    mem_ratio: float = 1.0            # replicated / fsdp (>= pod size)
+    fsdp_pod_size: int = 1
+    t_fsdp: float = 0.0               # modeled sharded step seconds
+    gather_scatter_s: float = 0.0     # per-step AG+RS overhead on ICI
+
+
+def replica_memory_bytes(payload_bytes: float, *, pod_size: int = 1,
+                         opt_bytes_ratio: float = 2.0) -> dict:
+    """Persistent per-device param + optimiser-state bytes per policy.
+
+    ``opt_bytes_ratio`` is optimiser bytes per param byte (fp32 momentum
+    over bf16 params = 2.0; AdamW mu+nu = 4.0).  FSDP-within-pod divides
+    the whole persistent footprint by the pod size; the transient
+    all-gather buffer (one bucket's full payload during fwd/bwd) is
+    reported separately — it bounds how low the bucket budget must stay.
+    """
+    mem_rep = float(payload_bytes) * (1.0 + opt_bytes_ratio)
+    mem_fsdp = mem_rep / max(pod_size, 1)
+    return {
+        "mem_replicated": mem_rep,
+        "mem_fsdp_within_pod": mem_fsdp,
+        "mem_ratio": mem_rep / max(mem_fsdp, 1e-30),
+    }
 
 
 def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
@@ -274,7 +301,9 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
                         alpha: float = group_allreduce.DEFAULT_ALPHA,
                         beta: float = group_allreduce.DEFAULT_BETA,
                         gamma: float = group_allreduce.DEFAULT_GAMMA,
-                        topology=None) -> CommReport:
+                        topology=None, fsdp_shard_axis: str = None,
+                        fsdp_S: int = None,
+                        opt_bytes_ratio: float = 2.0) -> CommReport:
     """Per-step averaging wall time: per-leaf vs bucketed vs overlapped.
 
     The beta (bandwidth) term is identical — bucketing moves the same bytes —
@@ -290,6 +319,14 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
     alpha/beta/gamma and modeled-optimal budget
     (``plan.modeled_wagma_step_seconds``), compared against forcing one
     global 32 MiB budget on the same topology.
+
+    ``fsdp_shard_axis`` (with ``topology``) additionally fills the
+    FSDP-within-pod fields (DESIGN.md §10): persistent per-device
+    param+opt memory under both policies (``replica_memory_bytes``), the
+    modeled sharded step time (butterfly on 1/pod_size of the payload,
+    plus the per-step all-gather/reduce-scatter overhead on the shard
+    link class — ``plan.modeled_fsdp_step_seconds``), with ``fsdp_S``
+    the pod-level group size (default: sqrt of the pod count).
 
     ``payload_bytes`` overrides the ``param_count``-estimated payload with
     an exact figure (e.g. from ``jax.eval_shape`` on the real model), so
@@ -336,6 +373,23 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
         rep.t_hierarchical_flat_budget = flat_budget["step_s"]
         rep.hierarchical_budget_win = (flat_budget["step_s"]
                                        / max(hier["step_s"], 1e-30))
+        if fsdp_shard_axis is not None:
+            from repro.core import grouping
+            ax = topology.axis_names.index(fsdp_shard_axis)
+            pod = topology.axis_sizes[ax]
+            eff_P = topology.P // pod
+            S_eff = fsdp_S or grouping.default_group_size(eff_P)
+            fsdp = plan_mod.modeled_fsdp_step_seconds(
+                int(payload), topology, S_eff, shard_axis=fsdp_shard_axis,
+                tau=tau, overlap=True)
+            mem = replica_memory_bytes(payload, pod_size=pod,
+                                       opt_bytes_ratio=opt_bytes_ratio)
+            rep.mem_replicated = mem["mem_replicated"]
+            rep.mem_fsdp_within_pod = mem["mem_fsdp_within_pod"]
+            rep.mem_ratio = mem["mem_ratio"]
+            rep.fsdp_pod_size = pod
+            rep.t_fsdp = fsdp["step_s"]
+            rep.gather_scatter_s = fsdp["gather_scatter_s"]
     return rep
 
 

@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# setdefault so a caller (e.g. the CI fsdp smoke) can force a smaller
+# host-device count; the full sweep still defaults to the 512-chip view.
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh).
 
@@ -19,6 +22,11 @@ found in the compiled HLO, classified per mesh axis) and the plan's
 human-readable summary (stages, link class, bucket count, budget per
 class) — to experiments/dryrun/<arch>__<shape>__<mesh>[__variant].json.
 ``--hierarchical`` compiles the pod-aware 2-link-class topology.
+``--sharding fsdp`` compiles the FSDP-within-pod ReplicaState step
+(DESIGN.md §10) and FAILS if any parameter all-gather / gradient
+reduce-scatter leaks off the intra-pod shard axis onto a DCN axis
+(``hlo_analysis.collective_axis_counts``); ``--smoke`` + ``--mesh-shape``
+shrink the sweep to the CI-sized 8-device smoke (scripts/ci.sh).
 
 long_500k rules (DESIGN.md §5): native for xlstm/recurrentgemma/gemma3;
 explicit `swa` sliding-window variant for the pure full-attention archs;
@@ -143,9 +151,13 @@ def bucket_collective_summary(averager, local_params, colls: dict,
     return out
 
 
-def resolve_config(arch: str, shape_name: str):
-    """Returns (cfg, variant_tag) or (None, reason) for documented skips."""
-    cfg = get_config(arch)
+def resolve_config(arch: str, shape_name: str, smoke: bool = False):
+    """Returns (cfg, variant_tag) or (None, reason) for documented skips.
+
+    ``smoke`` picks the reduced config BEFORE the long_500k variant logic
+    so the sliding-window (swa) patch still applies to the smoke config.
+    """
+    cfg = get_config(arch, smoke=smoke)
     if shape_name != "long_500k":
         return cfg, ""
     if arch in LONG_SKIP:
@@ -156,9 +168,10 @@ def resolve_config(arch: str, shape_name: str):
 
 
 def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
-               group_size=None, fsdp: int = 1, donate: bool = True,
+               group_size=None, donate: bool = True,
                average_dtype: str = "float32", microbatch=None,
-               cfg_overrides: dict = None, hierarchical: bool = False):
+               cfg_overrides: dict = None, hierarchical: bool = False,
+               sharding: str = "replicated", smoke: bool = False):
     """Build + lower + compile one (arch, shape) on the given mesh.
 
     Tuning knobs for the §Perf hillclimb: ``mesh`` may be any logical
@@ -167,7 +180,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
     ``microbatch`` enables gradient accumulation, ``cfg_overrides`` patches
     the ModelConfig (e.g. attention block sizes, moe_chunks).
     """
-    cfg, variant = resolve_config(arch, shape_name)
+    cfg, variant = resolve_config(arch, shape_name, smoke=smoke)
     if cfg is None:
         return {"status": "skipped", "reason": variant}
     if cfg_overrides:
@@ -181,13 +194,15 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
         if shape.kind == "train":
             from repro.core.baselines import make_averager
             from repro.core.group_allreduce import dp_axis_layout
+            from repro.launch.train import resolve_sharding
             from repro.optim import sgd
-            from repro.train import build_train_step, stacked_init
+            from repro.train import build_train_step, init_replica_state
 
             names, sizes = dp_axis_layout(
                 mesh.axis_names, dict(mesh.shape),
                 tuple(a for a in mesh.axis_names if a in ("pod", "data")))
-            kw = {}
+            policy = resolve_sharding(sharding, names)
+            kw = {"sharding": policy}
             if averager == "wagma":
                 kw["average_dtype"] = average_dtype
                 if group_size:
@@ -197,20 +212,14 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
                 kw["topology"] = Topology.hierarchical(names, sizes)
             av = make_averager(averager, names, sizes, **kw)
             opt = sgd(0.1, momentum=0.9)
-            params_sds, pspecs = stacked_init(model, mesh,
-                                              jax.random.PRNGKey(0),
-                                              abstract=True)
-            from repro.train.train_step import train_shardings, batch_shardings
-            opt_shapes = jax.eval_shape(lambda p: jax.vmap(opt.init)(p),
-                                        params_sds)
-            psh, osh = train_shardings(mesh, pspecs, opt_shapes, params_sds)
-            opt_sds = jax.tree.map(
-                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
-                opt_shapes, osh)
+            state_sds = init_replica_state(model, opt, av, mesh,
+                                           jax.random.PRNGKey(0),
+                                           abstract=True)
+            params_sds = state_sds.params
             batch = specs_lib.batch_specs(cfg, shape, mesh)
             step = build_train_step(model, opt, av, mesh, phase=0, sync=False,
                                     microbatch=microbatch)
-            lowered = step.lower(params_sds, opt_sds, batch)
+            lowered = step.lower(state_sds, batch)
         elif shape.kind == "prefill":
             params_sds = specs_lib.serve_params_specs(cfg, mesh)
             batch = specs_lib.batch_specs(cfg, shape, mesh)
@@ -246,11 +255,49 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
     colls = collective_summary(hlo, halve_kinds=tuple(halve))
     bucket_colls = None
     if av is not None:
-        local_params = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), params_sds,
-            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        if av.sharding.is_sharded:
+            # the sharded plan was compiled from the full model tree at
+            # state-init time; hand the summary the same structure
+            local_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        else:
+            local_params = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                params_sds,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
         bucket_colls = bucket_collective_summary(av, local_params, colls,
                                                  mesh=mesh, hlo_text=hlo)
+        if av.sharding.is_sharded:
+            # FSDP invariant: parameter all-gathers / gradient
+            # reduce-scatters ride the intra-pod shard axis ONLY —
+            # classify every grouped collective by mesh axis and flag
+            # any landing on another dp axis (a DCN leak)
+            from repro.launch.hlo_analysis import collective_axis_counts
+            ag = collective_axis_counts(
+                hlo, tuple(mesh.axis_names),
+                tuple(mesh.shape[a] for a in mesh.axis_names))
+            dp_axes = {a for a in mesh.axis_names if a in ("pod", "data")}
+            shard_ax = av.sharding.shard_axis
+            # a "mixed" classification (replica groups spanning several
+            # mesh axes — e.g. a full-dp pod x data gather) is exactly the
+            # kind of leak this gate exists to catch, so it counts too
+            leaks = {
+                kind: {a: n for a, n in ent.items()
+                       if a == "mixed" or (a in dp_axes and a != shard_ax)}
+                for kind, ent in ag.items()}
+            leaks = {k: v for k, v in leaks.items() if v}
+            # the gate must not pass vacuously: if the parser classified
+            # ZERO gathers onto the shard axis (e.g. an XLA version
+            # switches to iota-form replica_groups the regex cannot read),
+            # the invariant is untested and the smoke must fail loudly
+            on_shard = (ag.get("all-gather", {}).get(shard_ax, 0)
+                        + ag.get("reduce-scatter", {}).get(shard_ax, 0))
+            if on_shard == 0:
+                leaks["unparsed"] = {
+                    "reason": "no all-gather/reduce-scatter classified "
+                              "onto the shard axis — parser saw nothing"}
+            bucket_colls["gather_scatter_by_axis"] = ag
+            bucket_colls["fsdp_gather_leaks"] = leaks
+            bucket_colls["fsdp_gathers_intra_pod_only"] = not leaks
         print("  " + bucket_colls["plan_summary"].replace("\n", "\n  "),
               flush=True)
     n_dp = 1
@@ -307,6 +354,17 @@ def main():
     ap.add_argument("--hierarchical", action="store_true",
                     help="pod-aware topology: pod axis rides DCN, data "
                          "rides ICI, per-class bucket budgets")
+    ap.add_argument("--sharding", default="replicated",
+                    choices=["replicated", "fsdp"],
+                    help="fsdp: FSDP-within-pod sharded replicas "
+                         "(DESIGN.md §10); the run fails if any parameter "
+                         "all-gather leaks off the intra-pod shard axis")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke configs (CI-sized compile)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="comma ints overriding the production mesh: "
+                         "'pod,data,model' (3 values) or 'data,model' (2); "
+                         "product must equal the forced host-device count")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -323,17 +381,34 @@ def main():
 
     results = []
     for arch, shape, mp in pairs:
-        mesh = mesh_lib.make_production_mesh(multi_pod=mp)
-        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        if args.mesh_shape:
+            dims = tuple(int(x) for x in args.mesh_shape.split(","))
+            axes = ("pod", "data", "model") if len(dims) == 3 \
+                else ("data", "model")
+            mesh = jax.make_mesh(dims, axes)
+            mesh_tag = "x".join(str(d) for d in dims)
+        else:
+            mesh = mesh_lib.make_production_mesh(multi_pod=mp)
+            mesh_tag = "2x16x16" if mp else "16x16"
+        tag = f"{arch}__{shape}__{mesh_tag}"
         if args.averager != "wagma":
             tag += f"__{args.averager}"
         if args.hierarchical:
             tag += "__hier"
+        if args.sharding != "replicated":
+            tag += f"__{args.sharding}"
         print(f"=== {tag} ===", flush=True)
         try:
             res = lower_pair(arch, shape, mesh, averager=args.averager,
                              group_size=args.group_size,
-                             hierarchical=args.hierarchical)
+                             hierarchical=args.hierarchical,
+                             sharding=args.sharding, smoke=args.smoke)
+            if res.get("bucket_collectives") and \
+                    res["bucket_collectives"].get(
+                        "fsdp_gathers_intra_pod_only") is False:
+                res["status"] = "error"
+                res["error"] = ("fsdp all-gather leak: " + str(
+                    res["bucket_collectives"]["fsdp_gather_leaks"]))
         except Exception as e:
             res = {"status": "error", "error": f"{type(e).__name__}: {e}",
                    "trace": traceback.format_exc()[-2000:]}
@@ -347,7 +422,9 @@ def main():
                       f"flops/dev={res['analytic']['flops_per_device']:.3e}",
                       flush=True)
             else:
-                print(f"  {res['status']}: {res.get('reason','')}", flush=True)
+                print(f"  {res['status']}: "
+                      f"{res.get('reason', res.get('error', ''))}",
+                      flush=True)
         res["tag"] = tag
         results.append(res)
         with open(os.path.join(args.out, tag + ".json"), "w") as f:

@@ -250,6 +250,63 @@ def permute_axis_counts(hlo_text: str, axis_names: Sequence[str],
     return counts
 
 
+_GROUPED_RE = re.compile(
+    r"(all-gather|reduce-scatter|all-reduce|all-to-all)"
+    r"(?:-start)?(?:\.\d+)?\(.*?"
+    r"replica_groups=\{((?:\{[\d,\s]+\},?)*)\}")
+
+
+def collective_axis_counts(hlo_text: str, axis_names: Sequence[str],
+                           axis_sizes: Sequence[int],
+                           kinds: Sequence[str] = ("all-gather",
+                                                   "reduce-scatter")
+                           ) -> Dict[str, Dict[str, int]]:
+    """Classify grouped collectives by the mesh axis their groups span.
+
+    The replica-group analogue of :func:`permute_axis_counts`: parses each
+    matching op's explicit ``replica_groups`` and maps every group's member
+    device ids to mesh coordinates (C-order over ``axis_sizes``,
+    major-to-minor).  A group whose members differ along exactly one axis
+    rides that axis; groups spanning several axes (or ops whose groups
+    disagree) land under ``"mixed"``.  Returns ``{kind: {axis: count}}``.
+
+    The FSDP-within-pod CI smoke (DESIGN.md §10) uses this to assert the
+    sharded train step's parameter all-gathers and gradient
+    reduce-scatters ride the intra-pod (shard) axis ONLY — any all-gather
+    classified onto a DCN axis is a leak of the sharding invariant.
+    """
+    names = list(axis_names)
+    sizes = [int(s) for s in axis_sizes]
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+
+    def coords(dev: int) -> Tuple[int, ...]:
+        return tuple((dev // strides[i]) % sizes[i] for i in range(len(sizes)))
+
+    counts: Dict[str, Dict[str, int]] = {}
+    for line in hlo_text.splitlines():
+        m = _GROUPED_RE.search(line.strip().rstrip(","))
+        if not m or m.group(1) not in kinds:
+            continue
+        kind = m.group(1)
+        axes = set()
+        for grp in re.findall(r"\{([\d,\s]+)\}", "{" + m.group(2) + "}"):
+            members = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if len(members) < 2:
+                continue
+            base = coords(members[0])
+            for dev in members[1:]:
+                c = coords(dev)
+                axes.update(i for i in range(len(sizes)) if c[i] != base[i])
+        if not axes:
+            continue
+        key = names[axes.pop()] if len(axes) == 1 else "mixed"
+        ent = counts.setdefault(kind, {})
+        ent[key] = ent.get(key, 0) + 1
+    return counts
+
+
 def count_ppermutes(jaxpr) -> int:
     """Count ``ppermute`` equations in a (possibly nested) jaxpr.
 

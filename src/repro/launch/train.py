@@ -24,25 +24,43 @@ from repro.configs import SHAPES, get_config
 from repro.configs.base import InputShape
 from repro.core.baselines import make_averager
 from repro.core.group_allreduce import dp_axis_layout
+from repro.core.replica import REPLICATED, ShardingPolicy, consolidate_state
 from repro.data import make_batch_fn
 from repro.models.registry import build_model
 from repro.optim import sgd, adamw, cosine_warmup
-from repro.train import build_train_step, stacked_init, dp_axes_of
-from repro.checkpoint import save_checkpoint, consolidate
+from repro.train import build_train_step, init_replica_state, dp_axes_of
+from repro.checkpoint import save_replica_state
 from repro import compat
+
+
+def resolve_sharding(sharding, dp_names) -> ShardingPolicy:
+    """CLI/ctor spelling -> ShardingPolicy.
+
+    ``None``/``"replicated"`` -> replicated; ``"fsdp"`` shards over the
+    minor (intra-pod) dp axis; a ready ShardingPolicy passes through.
+    """
+    if sharding is None or sharding == "replicated":
+        return REPLICATED
+    if isinstance(sharding, ShardingPolicy):
+        return sharding
+    if sharding == "fsdp":
+        return ShardingPolicy.fsdp_within_pod(dp_names[0])
+    raise ValueError(f"unknown sharding {sharding!r}; options: "
+                     f"replicated | fsdp | ShardingPolicy(...)")
 
 
 class Trainer:
     def __init__(self, cfg, mesh, *, averager="wagma", group_size=None,
                  tau=10, optimizer="sgd", learning_rate=0.1, momentum=0.9,
                  seq_len=512, global_batch=None, seed=0, microbatch=None,
-                 imbalanced=False, topology=None):
+                 imbalanced=False, topology=None, sharding=None):
         self.cfg = cfg
         self.mesh = mesh
         self.model = build_model(cfg)
         dp = dp_axes_of(mesh)
         self.n_dp = int(np.prod([mesh.shape[a] for a in dp]))
         names, sizes = dp_axis_layout(mesh.axis_names, dict(mesh.shape), dp)
+        self.sharding = resolve_sharding(sharding, names)
         kw = {}
         if averager == "wagma":
             kw = {"group_size": group_size, "tau": tau}
@@ -53,6 +71,7 @@ class Trainer:
             # AveragingPlan per tree structure on it — per-link-class bucket
             # budgets, stage classification, wavefront schedule (DESIGN §9)
             kw["topology"] = topology
+        kw["sharding"] = self.sharding
         self.averager = make_averager(averager, names, sizes, **kw)
         if optimizer == "sgd":
             self.opt = sgd(learning_rate, momentum=momentum)
@@ -65,13 +84,21 @@ class Trainer:
         self.microbatch = microbatch
         self._steps = {}
         with compat.set_mesh(mesh):
-            self.params, self.pspecs = stacked_init(self.model, mesh,
-                                                    jax.random.PRNGKey(seed))
-            self.opt_state = jax.jit(
-                lambda p: jax.vmap(self.opt.init)(p))(self.params)
+            self.state = init_replica_state(self.model, self.opt,
+                                            self.averager, mesh,
+                                            jax.random.PRNGKey(seed))
         dp_spec = dp if len(dp) > 1 else dp[0]
         self._batch_sharding = lambda v: NamedSharding(
             mesh, P(dp_spec, *([None] * (v.ndim - 1))))
+
+    @property
+    def params(self):
+        return self.state.params
+
+    def plan(self):
+        """The compiled AveragingPlan the train step executes."""
+        from repro.train.train_step import _model_shapes
+        return self.averager.plan_for(_model_shapes(self.model))
 
     def _step_fn(self, t: int):
         sync = self.averager.sync_due(t)
@@ -97,8 +124,7 @@ class Trainer:
             for t in range(steps):
                 batch = self._put_batch(t)
                 step = self._step_fn(t)
-                self.params, self.opt_state, metrics = step(
-                    self.params, self.opt_state, batch)
+                self.state, metrics = step(self.state, batch)
                 loss = float(metrics["loss"])
                 history.append(loss)
                 if log_every and (t % log_every == 0 or t == steps - 1):
@@ -108,12 +134,15 @@ class Trainer:
                     print(f"step {t:5d} loss {loss:.4f} "
                           f"({tput:,.0f} tok/s wall)", flush=True)
                 if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
-                    save_checkpoint(ckpt_dir, jax.device_get(self.params),
-                                    step=t + 1)
+                    save_replica_state(
+                        ckpt_dir, jax.device_get(self.state),
+                        sharding=self.sharding,
+                        metadata={"arch": self.cfg.name})
         return history
 
     def consolidated(self):
-        return consolidate(jax.device_get(self.params))
+        plan = self.plan() if self.sharding.is_sharded else None
+        return consolidate_state(jax.device_get(self.state), plan)
 
 
 def main():
@@ -131,16 +160,29 @@ def main():
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--data-axis", type=int, default=None)
     ap.add_argument("--model-axis", type=int, default=None)
+    ap.add_argument("--pod-axis", type=int, default=None,
+                    help="with --data-axis: build a (pod, data, model) "
+                         "mesh — required for --sharding fsdp (the pod "
+                         "axis carries the pod-to-pod averaging)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--pod-dcn", action="store_true",
                     help="hierarchical topology: the pod axis rides DCN "
                          "constants/budget, data rides ICI (DESIGN.md §9)")
+    ap.add_argument("--sharding", default="replicated",
+                    choices=["replicated", "fsdp"],
+                    help="fsdp: shard params/opt over the intra-pod dp "
+                         "axis; replicas inside a pod act as one logical "
+                         "WAGMA worker (DESIGN.md §10)")
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--imbalanced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
-    if args.data_axis:
+    if args.data_axis and args.pod_axis:
+        mesh = jax.make_mesh(
+            (args.pod_axis, args.data_axis, args.model_axis or 1),
+            ("pod", "data", "model"))
+    elif args.data_axis:
         mesh = jax.make_mesh((args.data_axis, args.model_axis or 1),
                              ("data", "model"))
     else:
@@ -159,7 +201,7 @@ def main():
                  optimizer=args.optimizer, learning_rate=args.lr,
                  seq_len=args.seq_len, global_batch=args.global_batch,
                  microbatch=args.microbatch, imbalanced=args.imbalanced,
-                 topology=topology)
+                 topology=topology, sharding=args.sharding)
     hist = tr.run(args.steps, ckpt_dir=args.ckpt_dir,
                   ckpt_every=50 if args.ckpt_dir else 0)
     print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")

@@ -1,5 +1,8 @@
-from repro.train.train_step import (build_train_step, stacked_init,
-                                    train_shardings, dp_axes_of)
+from repro.train.train_step import (batch_shardings, build_train_step,
+                                    dp_axes_of, init_replica_state,
+                                    replica_state_specs, stacked_init,
+                                    train_shardings)
 
-__all__ = ["build_train_step", "stacked_init", "train_shardings",
-           "dp_axes_of"]
+__all__ = ["batch_shardings", "build_train_step", "dp_axes_of",
+           "init_replica_state", "replica_state_specs", "stacked_init",
+           "train_shardings"]

@@ -23,12 +23,22 @@ class boundaries.  Per-leaf (``fused=False``) and serial-bucketed
 (``overlap=False``) behaviour remain available as plan configs and are
 differentially tested to match bit-for-bit.
 
-Because model averaging needs **divergent per-replica weights**, params and
-optimiser state carry a leading dp-replica axis of size P_dp, sharded over
-(pod, data): global arrays are (P_dp, ...) and each replica sees its own
-slice (squeezed inside the manual region). Per-device memory equals classic
-replicated data parallelism. See DESIGN.md §2 for the FSDP tension and the
-hierarchical-WAGMA mitigation.
+**Replica state (DESIGN.md §10).**  The step operates on a
+:class:`~repro.core.replica.ReplicaState` — params + optimiser state +
+averager step/phase bookkeeping — whose layout the averager's
+:class:`~repro.core.replica.ShardingPolicy` dictates:
+
+* ``replicated`` — model averaging needs divergent per-replica weights, so
+  params and optimiser state carry a leading dp-replica axis of size P_dp,
+  sharded over (pod, data): global arrays are (P_dp, ...) and each replica
+  sees its own slice (squeezed inside the manual region).  Per-device
+  memory equals classic replicated data parallelism (the §2 tension).
+* ``fsdp_within_pod(shard_axis)`` — replicas inside a pod share weights and
+  shard them over the intra-pod (ICI) axis: the state holds
+  (P_pods, bucket) flat shard buckets, the step all-gathers params per
+  bucket on ICI for fwd/bwd, reduce-scatters the pod-mean gradient back,
+  updates only the owned shard, and the averager butterflies pod-to-pod on
+  the slices directly.  Per-device param+opt memory ÷ pod size.
 
 **Compiled-phase-variant dispatch.** XLA collectives need static
 permutations, so the group pattern of iteration t is static per compiled
@@ -49,6 +59,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.group_allreduce import dp_axis_layout
+from repro.core.replica import ReplicaState, map_opt_state
 from repro.models import common as cm
 
 
@@ -96,15 +107,127 @@ def stacked_init(model, mesh, key, abstract: bool = False):
     return jax.tree.map(rep, params0, specs), specs
 
 
+@functools.lru_cache(maxsize=32)
+def _model_shapes(model):
+    """Abstract full param tree (key-independent shapes).
+
+    Cached per model object: every step-variant build and spec derivation
+    re-asks for the same shapes, and eval_shape re-traces ``model.init``
+    each time otherwise.
+    """
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _eff_dim0_spec(mesh, averager):
+    """Dim-0 spec for (P_eff, ...) stacked FSDP state arrays.
+
+    Mesh-order (major-to-minor) effective dp axes, so the C-order index of
+    dim 0 equals the minor-to-major effective replica rank — the same
+    convention the replicated (P_dp, ...) stacking and the stacked
+    simulator use.
+    """
+    shard_axis = averager.sharding.shard_axis
+    eff = tuple(a for a in dp_axes_of(mesh) if a != shard_axis)
+    return eff if len(eff) != 1 else eff[0]
+
+
+def replica_state_specs(model, optimizer, averager, mesh):
+    """PartitionSpec pytree for a :class:`ReplicaState` (shard_map in/out).
+
+    Replicated: every params/opt leaf shards dim 0 (the replica axis) over
+    all dp axes.  FSDP: the (P_pods, bucket) buffers shard dim 0 over the
+    effective (pod) axes and dim 1 over the shard axis; the per-replica
+    optimiser ``count`` shards dim 0 only.
+    """
+    dp_spec = _dp_spec(mesh)
+    if not averager.sharding.is_sharded:
+        lead = P(dp_spec)
+        return ReplicaState(lead, lead, P(), P())
+    eff0 = _eff_dim0_spec(mesh, averager)
+    buf = P(eff0, averager.sharding.shard_axis)
+    plan = averager.plan_for(_model_shapes(model))
+    opt_shapes = jax.eval_shape(optimizer.init, plan.shard_struct())
+    opt_specs = map_opt_state(opt_shapes, lambda _: buf, lambda _: P(eff0))
+    return ReplicaState(buf, opt_specs, P(), P())
+
+
+def _scalar_sds(mesh):
+    return jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+
+
+def init_replica_state(model, optimizer, averager, mesh, key,
+                       abstract: bool = False) -> ReplicaState:
+    """Build the global :class:`ReplicaState` the train step operates on.
+
+    Replicated policy: (P_dp, ...)-stacked divergent params (``stacked_init``)
+    + vmapped optimiser state.  FSDP policy: the compiled plan's
+    shard-aligned bucket buffers, stacked (P_pods, bucket) and sharded over
+    (effective axes, shard axis).  ``abstract=True`` returns
+    ShapeDtypeStructs with shardings (dry-run compilation).
+    """
+    from repro.core import bucketing
+
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+
+    if not averager.sharding.is_sharded:
+        if abstract:
+            params, pspecs = stacked_init(model, mesh, key, abstract=True)
+            opt_shapes = jax.eval_shape(
+                lambda p: jax.vmap(optimizer.init)(p), params)
+            _, opt_sh = train_shardings(mesh, pspecs, opt_shapes, params)
+            opt_sds = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                opt_shapes, opt_sh, is_leaf=is_sds)
+            return ReplicaState(params, opt_sds, _scalar_sds(mesh),
+                                _scalar_sds(mesh))
+        params, _ = stacked_init(model, mesh, key)
+        opt_state = jax.jit(lambda p: jax.vmap(optimizer.init)(p))(params)
+        return ReplicaState.create(params, opt_state)
+
+    plan = averager.plan_for(_model_shapes(model))
+    specs = replica_state_specs(model, optimizer, averager, mesh)
+    n_eff = plan.P_eff
+    lay = plan.shard_layout
+    buf_sharding = NamedSharding(mesh, specs.params)
+    if abstract:
+        bufs = tuple(
+            jax.ShapeDtypeStruct((n_eff, size), dt, sharding=buf_sharding)
+            for size, dt in zip(lay.bucket_sizes, lay.bucket_dtypes))
+    else:
+        packed = bucketing.pack(model.init(key), lay)
+        bufs = tuple(
+            jax.device_put(jnp.broadcast_to(b[None], (n_eff,) + b.shape),
+                           buf_sharding)
+            for b in packed)
+    opt_shapes = jax.eval_shape(lambda p: jax.vmap(optimizer.init)(p), bufs)
+    if abstract:
+        count_sharding = NamedSharding(mesh,
+                                       P(_eff_dim0_spec(mesh, averager)))
+        opt = map_opt_state(
+            opt_shapes,
+            lambda sub: jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=buf_sharding),
+                sub, is_leaf=is_sds),
+            lambda c: jax.ShapeDtypeStruct(c.shape, c.dtype,
+                                           sharding=count_sharding))
+        return ReplicaState(bufs, opt, _scalar_sds(mesh), _scalar_sds(mesh))
+    opt = jax.jit(lambda p: jax.vmap(optimizer.init)(p))(bufs)
+    return ReplicaState.create(bufs, opt)
+
+
 def build_train_step(model, optimizer, averager, mesh, *, phase: int,
                      sync: bool, microbatch: Optional[int] = None,
                      remat: bool = True):
-    """Returns jitted step(stacked_params, stacked_opt, batch) ->
-    (params, opt, metrics)."""
+    """Returns jitted step(state: ReplicaState, batch) -> (state, metrics)."""
     dp = dp_axes_of(mesh)
     dp_spec = _dp_spec(mesh)
+    sharded = averager.sharding.is_sharded
+    plan = averager.plan_for(_model_shapes(model)) if sharded else None
 
-    def replica_fn(params, opt_state, batch):
+    def grads_and_metrics(params, batch):
         def loss_fn(p, mb):
             loss, metrics = model.loss(p, mb, remat=remat)
             return loss, metrics
@@ -129,14 +252,26 @@ def build_train_step(model, optimizer, averager, mesh, *, phase: int,
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g)
                 return (g_acc, l_acc + loss), metrics
 
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss), metrics_all = jax.lax.scan(
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, _), metrics_all = jax.lax.scan(
                 acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
             grads = jax.tree.map(lambda g: g / microbatch, grads)
             metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
         else:
-            (loss, metrics), grads = jax.value_and_grad(
+            (_, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def replica_fn(params, opt_state, batch):
+        if sharded:
+            # fwd/bwd on the gathered tree (per-bucket all-gather on ICI),
+            # then reduce-scatter the pod-mean gradient back to shards
+            grads, metrics = grads_and_metrics(
+                plan.unshard_tree(params), batch)
+            grads = plan.grad_shards(grads)
+        else:
+            grads, metrics = grads_and_metrics(params, batch)
 
         if averager.grad_comm:
             grads = (averager.sync(grads) if sync
@@ -152,19 +287,22 @@ def build_train_step(model, optimizer, averager, mesh, *, phase: int,
     squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
     expand = lambda t: jax.tree.map(lambda a: a[None], t)
 
-    def step(stacked_params, stacked_opt, batch):
-        p, o, m = replica_fn(squeeze(stacked_params), squeeze(stacked_opt),
+    def step(state, batch):
+        p, o, m = replica_fn(squeeze(state.params), squeeze(state.opt_state),
                              batch)
-        return expand(p), expand(o), m
+        new_state = ReplicaState(
+            expand(p), expand(o), state.step + 1,
+            jnp.asarray(-1 if sync else phase, jnp.int32))
+        return new_state, m
 
-    lead = P(dp_spec)
+    state_specs = replica_state_specs(model, optimizer, averager, mesh)
     sm = compat.shard_map(
         step, mesh=mesh,
-        in_specs=(lead, lead, lead),
-        out_specs=(lead, lead, P()),
+        in_specs=(state_specs, P(dp_spec)),
+        out_specs=(state_specs, P()),
         axis_names=set(dp), check_vma=False,
     )
-    return jax.jit(sm, donate_argnums=(0, 1))
+    return jax.jit(sm, donate_argnums=(0,))
 
 
 def train_shardings(mesh, param_specs, opt_state_shapes, params_shapes):

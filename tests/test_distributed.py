@@ -52,7 +52,7 @@ def test_wagma_train_step_loss_decreases_and_sync_equalises():
         from repro.optim import sgd
         from repro.core.baselines import make_averager
         from repro.core.group_allreduce import dp_axis_layout
-        from repro.train import build_train_step, stacked_init
+        from repro.train import build_train_step, init_replica_state
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         cfg = get_config("qwen3-0.6b", smoke=True)
@@ -62,8 +62,8 @@ def test_wagma_train_step_loss_decreases_and_sync_equalises():
         av = make_averager("wagma", names, sizes, group_size=2, tau=4)
         opt = sgd(0.3, momentum=0.9)
         with compat.set_mesh(mesh):
-            params, _ = stacked_init(model, mesh, jax.random.PRNGKey(0))
-            opt_state = jax.jit(lambda p: jax.vmap(opt.init)(p))(params)
+            state = init_replica_state(model, opt, av, mesh,
+                                       jax.random.PRNGKey(0))
             bf = make_batch_fn(cfg, SHAPES["train_4k"], seed=0)
             steps, losses = {}, []
             for t in range(8):
@@ -74,9 +74,10 @@ def test_wagma_train_step_loss_decreases_and_sync_equalises():
                 nb = {k: jnp.asarray(v)[:, :32] for k, v in bf(t, 0, 8).items()}
                 batch = {k: jax.device_put(v, NamedSharding(mesh, P("data", None)))
                          for k, v in nb.items()}
-                params, opt_state, m = steps[key](params, opt_state, batch)
+                state, m = steps[key](state, batch)
                 losses.append(float(m["loss"]))
-            w = np.asarray(jax.tree.leaves(params)[0], np.float32)
+            assert int(state.step) == 8
+            w = np.asarray(jax.tree.leaves(state.params)[0], np.float32)
             assert np.abs(w - w[0:1]).max() < 1e-4, "sync must equalise replicas"
             assert losses[-1] < losses[0], losses
             print("LOSSES", ["%.3f" % l for l in losses])
@@ -114,7 +115,7 @@ def test_grad_averager_allreduce_matches_single_worker_equivalent():
         from repro.optim import sgd
         from repro.core.baselines import make_averager
         from repro.core.group_allreduce import dp_axis_layout
-        from repro.train import build_train_step, stacked_init
+        from repro.train import build_train_step, init_replica_state
 
         mesh = jax.make_mesh((4, 1), ("data", "model"))
         cfg = get_config("tinyllama-1.1b", smoke=True).variant(dtype="float32")
@@ -127,14 +128,14 @@ def test_grad_averager_allreduce_matches_single_worker_equivalent():
         # identical batch on every replica -> pmean(grads) == local grads
         batch_np = {"tokens": np.repeat(toks, 4, 0), "labels": np.repeat(toks, 4, 0)}
         with compat.set_mesh(mesh):
-            params, _ = stacked_init(model, mesh, jax.random.PRNGKey(0))
-            opt_state = jax.jit(lambda p: jax.vmap(opt.init)(p))(params)
+            state = init_replica_state(model, opt, av, mesh,
+                                       jax.random.PRNGKey(0))
             step = build_train_step(model, opt, av, mesh, phase=0, sync=False)
             batch = {k: jax.device_put(jnp.asarray(v),
                                        NamedSharding(mesh, P("data", None)))
                      for k, v in batch_np.items()}
-            params, opt_state, _ = step(params, opt_state, batch)
-            w = np.asarray(jax.tree.leaves(params)[0])
+            state, _ = step(state, batch)
+            w = np.asarray(jax.tree.leaves(state.params)[0])
         # single worker reference
         p0 = model.init(jax.random.PRNGKey(0))
         st0 = opt.init(p0)

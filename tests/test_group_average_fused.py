@@ -20,7 +20,14 @@ from subproc import run_sub as _run_sub
 _PREAMBLE = """
     from repro.core import bucketing, grouping
     from repro.core import group_allreduce as ga
+    from repro.core import plan as plan_mod
     from repro.launch.hlo_analysis import count_ppermutes
+
+    def flat_plan(local, names, sizes, S=None, **kw):
+        return plan_mod.compile_plan(
+            plan_mod.Topology.flat(names, sizes), local,
+            plan_mod.AveragingConfig(group_size=S,
+                                     average_dtype="float32", **kw))
 
     def mixed_tree(rng, P_dp):
         # mixed dtypes, a >1-lane leaf, a scalar-ish leaf, an empty leaf
@@ -51,16 +58,16 @@ def test_fused_equals_per_leaf_equals_stacked_every_offset():
         tree = mixed_tree(rng, P_dp)
         offsets = grouping.distinct_offsets(P_dp, S)
         assert len(offsets) > 1, offsets
+        local = jax.tree.map(lambda a: a[0], tree)
         for t, off in enumerate(offsets):
             variants = {}
             for key, kw in [
                     ("fused_pallas", dict(fused=True, use_pallas=True)),
                     ("fused_jnp", dict(fused=True, use_pallas=False)),
                     ("per_leaf", dict(fused=False))]:
+                pl = flat_plan(local, names, sizes, S=S, **kw)
                 f = compat.shard_map(
-                    lambda tr, kw=kw: ga.group_average(
-                        tr, offset=off, P=P_dp, S=S, axis_names=names,
-                        axis_sizes=sizes, average_dtype=jnp.float32, **kw),
+                    lambda tr, pl=pl, off=off: pl.average_offset(tr, off),
                     mesh=mesh, in_specs=P(("pod", "data")),
                     out_specs=P(("pod", "data")),
                     axis_names={"pod", "data"})
@@ -106,11 +113,10 @@ def test_ppermute_count_drops_to_buckets_times_stages():
         stages = grouping.ilog2(S)
 
         def make(fused):
+            plf = flat_plan(jax.tree.map(lambda a: a[0], tree), names, sizes,
+                            S=S, fused=fused)
             return compat.shard_map(
-                lambda tr: ga.group_average(tr, offset=0, P=P_dp, S=S,
-                                            axis_names=names, axis_sizes=sizes,
-                                            average_dtype=jnp.float32,
-                                            fused=fused),
+                lambda tr: plf.average_offset(tr, 0),
                 mesh=mesh, in_specs=P("data"), out_specs=P("data"),
                 axis_names={"data"})
 
@@ -132,11 +138,12 @@ def test_global_average_fused_matches_per_leaf():
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(2)
         tree = mixed_tree(rng, 8)
+        local = jax.tree.map(lambda a: a[0], tree)
         got = {}
         for fused in (True, False):
+            pl = flat_plan(local, ("data",), (8,), fused=fused)
             f = compat.shard_map(
-                lambda tr, fused=fused: ga.global_average(tr, ("data",),
-                                                          fused=fused),
+                lambda tr, pl=pl: pl.sync(tr),
                 mesh=mesh, in_specs=P("data"), out_specs=P("data"),
                 axis_names={"data"})
             got[fused] = jax.jit(f)(tree)

@@ -85,7 +85,14 @@ def test_overlapped_stage_seconds_model():
 _PREAMBLE = """
     from repro.core import bucketing, grouping
     from repro.core import group_allreduce as ga
+    from repro.core import plan as plan_mod
     from repro.launch.hlo_analysis import collective_summary, count_ppermutes
+
+    def flat_plan(local, names, sizes, S=None, **kw):
+        return plan_mod.compile_plan(
+            plan_mod.Topology.flat(names, sizes), local,
+            plan_mod.AveragingConfig(group_size=S,
+                                     average_dtype="float32", **kw))
 
     def mixed_tree(rng, P_dp):
         return {
@@ -116,6 +123,7 @@ def test_overlapped_equals_serial_equals_per_leaf_every_offset():
         tree = mixed_tree(rng, P_dp)
         offsets = grouping.distinct_offsets(P_dp, S)
         assert len(offsets) > 1, offsets
+        local = jax.tree.map(lambda a: a[0], tree)
         for t, off in enumerate(offsets):
             variants = {}
             for key, kw in [
@@ -126,10 +134,9 @@ def test_overlapped_equals_serial_equals_per_leaf_every_offset():
                     ("serial_bucketed", dict(fused=True, use_pallas=True,
                                              overlap=False)),
                     ("per_leaf", dict(fused=False))]:
+                pl = flat_plan(local, names, sizes, S=S, **kw)
                 f = compat.shard_map(
-                    lambda tr, kw=kw: ga.group_average(
-                        tr, offset=off, P=P_dp, S=S, axis_names=names,
-                        axis_sizes=sizes, average_dtype=jnp.float32, **kw),
+                    lambda tr, pl=pl, off=off: pl.average_offset(tr, off),
                     mesh=mesh, in_specs=P(("pod", "data")),
                     out_specs=P(("pod", "data")),
                     axis_names={"pod", "data"})
@@ -179,12 +186,10 @@ def test_overlap_preserves_launch_count_and_matches_hlo():
         assert expected == pl.class_layout(0).n_buckets * stages
 
         def make(overlap):
+            plv = flat_plan(local, names, sizes, S=S, fused=True,
+                            overlap=overlap)
             return jax.jit(compat.shard_map(
-                lambda tr: ga.group_average(tr, offset=0, P=P_dp, S=S,
-                                            axis_names=names,
-                                            axis_sizes=sizes,
-                                            average_dtype=jnp.float32,
-                                            fused=True, overlap=overlap),
+                lambda tr: plv.average_offset(tr, 0),
                 mesh=mesh, in_specs=P("data"), out_specs=P("data"),
                 axis_names={"data"}))
 

@@ -217,6 +217,22 @@ def test_costmodel_commreport_per_class_fields():
     assert win["class_budgets"]["ici"] != win["class_budgets"]["dcn"]
 
 
+def test_removed_shims_hard_error_with_plan_pointer():
+    """The deprecated kwarg entry points completed their deprecation cycle:
+    calling them is a hard error pointing at the plan API (ROADMAP item)."""
+    from repro.core import group_allreduce as ga
+    for fn, kwargs in [
+            (ga.group_average, dict(offset=0, P=8, S=4,
+                                    axis_names=("data",), axis_sizes=(8,))),
+            (ga.global_average, dict(axis_names=("data",))),
+            (ga.resolve_bucket_bytes, dict(bucket_bytes=None, P=8, S=4))]:
+        with pytest.raises(RuntimeError, match="compile_plan"):
+            fn({"w": jnp.zeros((4,))}, **kwargs)
+    # the constants and the stacked simulator legitimately remain
+    assert ga.DEFAULT_ALPHA > 0 and ga.DEFAULT_BETA > 0
+    assert callable(ga.group_average_stacked)
+
+
 def test_permute_axis_counts_classifies_synthetic_hlo():
     from repro.launch.hlo_analysis import permute_axis_counts
     # mesh ('pod','data') = (2,4): id = pod*4 + data
@@ -268,8 +284,9 @@ def run_sub(body: str, devices: int = 8, timeout: int = 420):
 
 
 def test_plan_average_bit_identical_to_legacy_paths_every_offset():
-    """Acceptance gate: the plan API == legacy fused shim == serial-bucketed
-    == per-leaf == stacked simulator, bit-for-bit, on every phase offset."""
+    """Acceptance gate: the overlapped plan == serial-bucketed == per-leaf
+    == stacked simulator, bit-for-bit, on every phase offset (the removed
+    kwarg shims' realisations, now expressed as plan configs)."""
     out = run_sub("""
         P_dp, S = 8, 4
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
@@ -277,9 +294,10 @@ def test_plan_average_bit_identical_to_legacy_paths_every_offset():
                                          ("pod", "data"))
         rng = np.random.default_rng(0)
         tree = mixed_tree(rng, P_dp)
+        local = jax.tree.map(lambda a: a[0], tree)
         topo = plan_mod.Topology.flat(names, sizes)
         plan = plan_mod.compile_plan(
-            topo, jax.tree.map(lambda a: a[0], tree),
+            topo, local,
             plan_mod.AveragingConfig(group_size=S, average_dtype="float32"))
         offsets = grouping.distinct_offsets(P_dp, S)
         assert plan.offsets == offsets and len(offsets) > 1
@@ -294,10 +312,12 @@ def test_plan_average_bit_identical_to_legacy_paths_every_offset():
                     ("legacy_fused", dict(fused=True)),
                     ("serial_bucketed", dict(fused=True, overlap=False)),
                     ("per_leaf", dict(fused=False))]:
+                pv = plan_mod.compile_plan(
+                    topo, local,
+                    plan_mod.AveragingConfig(group_size=S,
+                                             average_dtype="float32", **kw))
                 g = compat.shard_map(
-                    lambda tr, kw=kw, off=off: ga.group_average(
-                        tr, offset=off, P=P_dp, S=S, axis_names=names,
-                        axis_sizes=sizes, average_dtype=jnp.float32, **kw),
+                    lambda tr, pv=pv, off=off: pv.average_offset(tr, off),
                     mesh=mesh, in_specs=P(("pod", "data")),
                     out_specs=P(("pod", "data")),
                     axis_names={"pod", "data"})
