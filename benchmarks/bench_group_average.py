@@ -223,6 +223,62 @@ def modeled_fsdp_wmt(*, P_cluster: int = 64, n_pods: int = 4,
     }
 
 
+def modeled_streamed_fsdp(*, P_cluster: int = 64, n_pods: int = 4,
+                          tau: int = 10) -> dict:
+    """Layer-streamed FSDP model for the WMT transformer (DESIGN.md §11).
+
+    The gather-all FSDP step (§10) pays the full-tree all-gather serially
+    before the forward and pins the gathered tree through fwd/bwd; the
+    streamed engine gathers span k+1 while span k computes and re-gathers
+    in the backward, so per-step time is ``max(compute, gather)`` per span
+    and peak transient memory is ~2 layer spans.  Span compute comes from
+    the analytic train cost at the production chip's peak FLOP/s.
+    ``--check`` gates (a) streamed peak gathered bytes < the full-tree
+    gather and (b) streamed modeled step <= the gather-all step.
+    """
+    from repro.configs import SHAPES, get_config
+    from repro.core import plan as plan_mod
+    from repro.launch.costmodel import averaging_comm_cost, train_cost
+    from repro.launch.mesh import PEAK_FLOPS
+    from repro.models.registry import build_model
+
+    cfg = get_config("transformer-wmt")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(shapes))
+    payload = bucketing.tree_payload_bytes(shapes)
+    n_data = P_cluster // n_pods
+    topo = plan_mod.Topology.hierarchical(("data", "pod"), (n_data, n_pods),
+                                          dcn_axes=("pod",))
+    # one span per (encoder or decoder) layer; fwd compute per span from
+    # the analytic cost model (flops_per_device = 4x fwd incl. remat)
+    n_spans = cfg.n_layers + cfg.encoder_layers
+    cm = train_cost(cfg, SHAPES["train_4k"], n_dp=P_cluster, n_model=1)
+    span_fwd_s = cm.flops_per_device / 4.0 / n_spans / PEAK_FLOPS
+    rep = averaging_comm_cost(cfg, P=P_cluster,
+                              S=grouping.default_group_size(P_cluster),
+                              tau=tau, n_leaves=n_leaves,
+                              payload_bytes=payload, topology=topo,
+                              fsdp_shard_axis="data",
+                              fsdp_streamed_spans=n_spans,
+                              span_fwd_compute_s=span_fwd_s)
+    return {
+        "config": cfg.name,
+        "P": P_cluster, "n_pods": n_pods, "pod_size": n_data,
+        "tau": tau, "payload_bytes": payload, "n_spans": n_spans,
+        "span_fwd_compute_s": span_fwd_s,
+        "topology": topo.describe(),
+        "peak_gathered_bytes_full": rep.peak_gathered_bytes,
+        "peak_gathered_bytes_streamed": rep.peak_gathered_bytes_streamed,
+        "peak_gathered_ratio": (rep.peak_gathered_bytes
+                                / max(rep.peak_gathered_bytes_streamed, 1.0)),
+        "streamed_step_s": rep.t_fsdp_streamed,
+        "gather_all_step_s": rep.t_fsdp_gather_all,
+        "streamed_win": rep.streamed_win,
+        "fsdp_butterfly_step_s": rep.t_fsdp,
+    }
+
+
 def live_mesh_bench(args) -> dict:
     """Wall-clock + launch-count measurement on the 8-device CPU mesh."""
     n_dp, S = 8, args.S
@@ -293,7 +349,8 @@ def main():
 
     report = {"modeled_transformer_wmt": modeled_transformer_wmt(),
               "modeled_hierarchical_wmt": modeled_hierarchical_wmt(),
-              "modeled_fsdp_wmt": modeled_fsdp_wmt()}
+              "modeled_fsdp_wmt": modeled_fsdp_wmt(),
+              "modeled_streamed_fsdp": modeled_streamed_fsdp()}
     m = report["modeled_transformer_wmt"]
     print(f"[model] transformer_wmt @ P={m['P']} S={m['S']}: "
           f"serial {m['serial']['modeled_step_s'] * 1e3:.3f} ms/step "
@@ -322,6 +379,15 @@ def main():
           f"{fd['replicated_hier_step_s'] * 1e3:.3f} ms "
           f"({fd['step_ratio']:.3f}x)")
 
+    st = report["modeled_streamed_fsdp"]
+    print(f"[model] streamed fsdp @ {st['n_spans']} spans: peak gathered "
+          f"{st['peak_gathered_bytes_full'] / 2**20:.1f} -> "
+          f"{st['peak_gathered_bytes_streamed'] / 2**20:.1f} MiB "
+          f"({st['peak_gathered_ratio']:.1f}x), step "
+          f"{st['gather_all_step_s'] * 1e3:.3f} (gather-all) -> "
+          f"{st['streamed_step_s'] * 1e3:.3f} ms (streamed, "
+          f"{st['streamed_win']:.3f}x)")
+
     if not args.check:
         report["live_8dev_cpu"] = live_mesh_bench(args)
 
@@ -341,6 +407,11 @@ def main():
     # of the replicated hierarchical step it replaces
     ok_fsdp = (fd["mem_ratio"] >= fd["pod_size"]
                and fd["step_ratio"] <= 1.10)
+    # streamed gate: the layer-streamed engine must strictly shrink the
+    # transient gathered footprint and never lose to gather-all on time
+    ok_stream = (st["peak_gathered_bytes_streamed"]
+                 < st["peak_gathered_bytes_full"]
+                 and st["streamed_step_s"] <= st["gather_all_step_s"])
     if args.check:
         print("CHECK", "PASS" if ok else "FAIL",
               f"(overlapped {m['overlapped']['modeled_step_s']:.6e} "
@@ -352,7 +423,12 @@ def main():
               f"(mem ratio {fd['mem_ratio']:.1f} >= pod "
               f"{fd['pod_size']}, step ratio {fd['step_ratio']:.3f} "
               f"<= 1.10)")
-        return 0 if (ok and ok_hier and ok_fsdp) else 1
+        print("CHECK-STREAM", "PASS" if ok_stream else "FAIL",
+              f"(peak gathered {st['peak_gathered_bytes_streamed']:.3e} < "
+              f"full {st['peak_gathered_bytes_full']:.3e}, streamed "
+              f"{st['streamed_step_s']:.6e} <= gather-all "
+              f"{st['gather_all_step_s']:.6e})")
+        return 0 if (ok and ok_hier and ok_fsdp and ok_stream) else 1
     return 0
 
 

@@ -17,6 +17,14 @@ cd "$(dirname "$0")/.."
 unset XLA_FLAGS
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# Guard: compiled bytecode must never be tracked (it once was; .gitignore
+# covers new files, this catches anything force-added or historical).
+if git ls-files | grep -qE '(^|/)__pycache__/|\.py[co]$'; then
+  echo "ci.sh: tracked __pycache__/*.pyc files found:" >&2
+  git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$' >&2
+  exit 1
+fi
+
 # Dev-only deps (hypothesis): install on demand so the 7 property tests run
 # in tier-1 instead of skipping.  Best-effort — offline/air-gapped runners
 # fall back to the hypothesis_compat skip shim and the suite stays green.
@@ -45,3 +53,22 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
   python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
   --smoke --sharding fsdp --hierarchical --mesh-shape 2,4,1 \
   --out experiments/dryrun-ci
+
+# Layer-streamed FSDP smoke (DESIGN.md §11): compile the streamed train
+# step and cross-check the schedule against the HLO — the run exits
+# non-zero if any gather leaves the intra-pod axis, any single all-gather
+# exceeds one layer-span bucket (a gather-all regression), or the
+# shard-axis gather count mismatches the streamed fwd+bwd expectation
+# (a CSE'd backward re-gather that would silently pin forward buffers).
+XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+  --smoke --sharding fsdp --streamed --hierarchical --mesh-shape 2,4,1 \
+  --out experiments/dryrun-ci
+
+# Link-constant calibration scaffold smoke (ROADMAP: measured
+# alpha/beta/gamma): microbench ppermute/all-gather per mesh axis on the
+# 8-device CPU mesh and round-trip the JSON through
+# Topology.with_measured.  Tiny payloads — a few seconds; the tracked
+# LINK_CONSTANTS.json is regenerated manually with full payloads.
+python benchmarks/calibrate_links.py --smoke \
+  --out experiments/LINK_CONSTANTS.json

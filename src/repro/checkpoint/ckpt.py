@@ -111,6 +111,7 @@ def save_replica_state(path: str, state, sharding=None,
         "phase": int(np.asarray(state.phase)),
         "sharding": sharding.kind,
         "shard_axis": sharding.shard_axis,
+        "streamed": sharding.streamed,
     })
     save_checkpoint(path, state.params, opt_state=state.opt_state,
                     step=int(np.asarray(state.step)), metadata=meta)
@@ -122,10 +123,12 @@ def checkpoint_sharding(path: str):
     with open(os.path.join(path, "manifest.json")) as f:
         meta = json.load(f)["metadata"]
     return ShardingPolicy(meta.get("sharding", "replicated"),
-                          meta.get("shard_axis"))
+                          meta.get("shard_axis"),
+                          meta.get("streamed", False))
 
 
-def load_replica_state(path: str, template, *, sharding=None, plan=None):
+def load_replica_state(path: str, template, *, sharding=None, plan=None,
+                       layered=None):
     """Restore a ReplicaState into ``template``'s layout.
 
     ``sharding`` is the *restoring run's* policy (default replicated);
@@ -135,10 +138,35 @@ def load_replica_state(path: str, template, *, sharding=None, plan=None):
     restore) and converted host-side: pod models broadcast to members
     (sharded -> replicated) or pod-averaged and packed (replicated ->
     sharded).
+
+    When the streamed layout is on either side of the conversion,
+    ``layered`` (the model's ``ModelAPI.layered``) is additionally
+    required: streamed plans store the layered tree ``{"stem", "layers",
+    "head"}`` while replicated checkpoints hold the canonical tree, so
+    the restore merges/splits each replica row across structures (pure
+    restructuring, bit-exact).
     """
     from repro.core import replica as replica_mod
     sharding = sharding or replica_mod.REPLICATED
     src = checkpoint_sharding(path)
+    if src.kind == sharding.kind and src.streamed != sharding.streamed:
+        # both fsdp but different bucket layouts (layer-streamed vs
+        # gather-all): one plan cannot describe both, and the npz keys are
+        # flat bucket indices, so a direct template load would silently
+        # mix layouts
+        raise ValueError(
+            f"checkpoint at {path} was written under {src.describe()} but "
+            f"the run uses {sharding.describe()}; convert through a "
+            "replicated checkpoint (restore replicated with the source "
+            "layout's plan — plus layered= for a streamed source — save, "
+            "then restore that with this run's plan)")
+    needs_layered = (src.kind != sharding.kind
+                     and (src.streamed or sharding.streamed))
+    if needs_layered and layered is None:
+        raise ValueError(
+            f"converting between {src.describe()} and {sharding.describe()}"
+            " crosses the layered <-> canonical tree structures; pass "
+            "layered= (the model's ModelAPI.layered)")
     if src.kind == sharding.kind:
         src_template = template
     elif plan is None:
@@ -150,8 +178,13 @@ def load_replica_state(path: str, template, *, sharding=None, plan=None):
         src_template = replica_mod.sharded_state_template(
             plan, template.opt_state)
     else:
+        # replicated checkpoints hold the canonical tree; a streamed
+        # plan's replicated template is layered, so canonicalise it
         src_template = replica_mod.replicated_state_template(
             plan, template.opt_state)
+        if sharding.streamed:
+            src_template = replica_mod.canonical_replicated_template(
+                src_template, layered)
 
     params, opt, step = load_checkpoint(path, src_template.params,
                                         src_template.opt_state)
@@ -162,5 +195,10 @@ def load_replica_state(path: str, template, *, sharding=None, plan=None):
     if src.kind == sharding.kind:
         return state
     if src.is_sharded:
-        return replica_mod.fsdp_to_replicated_state(state, plan)
+        state = replica_mod.fsdp_to_replicated_state(state, plan)
+        if src.streamed:
+            state = replica_mod.merge_layered_state(state, layered)
+        return state
+    if sharding.streamed:
+        state = replica_mod.split_layered_state(state, layered)
     return replica_mod.replicated_to_fsdp_state(state, plan)

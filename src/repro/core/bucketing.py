@@ -78,16 +78,55 @@ class BucketLayout:
     slots: Tuple[_LeafSlot, ...]          # one per leaf, canonical order
     bucket_sizes: Tuple[int, ...]         # padded element counts
     bucket_dtypes: Tuple[np.dtype, ...]
+    # layer-aware layouts (DESIGN.md §11): the ordered group id each bucket
+    # belongs to, or () for ungrouped layouts.  Groups are closed ranges —
+    # every bucket holds leaves of exactly one group, and bucket indices are
+    # ordered by group — so a run of buckets always covers a contiguous
+    # layer span and the streamed FSDP engine can gather span k+1's buckets
+    # while span k computes.
+    bucket_groups: Tuple[int, ...] = ()
 
     @property
     def n_buckets(self) -> int:
         return len(self.bucket_sizes)
+
+    @property
+    def grouped(self) -> bool:
+        return bool(self.bucket_groups)
+
+    def group_bucket_indices(self, group: int) -> Tuple[int, ...]:
+        """Bucket indices holding the given group's leaves (contiguous)."""
+        return tuple(i for i, g in enumerate(self.bucket_groups)
+                     if g == group)
+
+    def group_bucket_map(self) -> Dict[int, Tuple[int, ...]]:
+        """The layer <-> bucket map: ordered group id -> bucket indices."""
+        out: Dict[int, Tuple[int, ...]] = {}
+        for i, g in enumerate(self.bucket_groups):
+            out[g] = out.get(g, ()) + (i,)
+        return out
+
+    def group_bytes(self, group: int) -> int:
+        """Padded bytes of one group's buckets (its gathered footprint)."""
+        return sum(self.bucket_sizes[i] * self.bucket_dtypes[i].itemsize
+                   for i in self.group_bucket_indices(group))
 
     def describe(self) -> str:
         return " ".join(
             f"[{i}:{np.dtype(d).name}x{s}]"
             for i, (s, d) in enumerate(zip(self.bucket_sizes,
                                            self.bucket_dtypes)))
+
+    def describe_groups(self) -> str:
+        """Compact layer-map summary: ``g0->b0, g1->b1-b2, ...``."""
+        if not self.grouped:
+            return "ungrouped"
+        parts = []
+        for g, idxs in sorted(self.group_bucket_map().items()):
+            rng = (f"b{idxs[0]}" if len(idxs) == 1
+                   else f"b{idxs[0]}-b{idxs[-1]}")
+            parts.append(f"{g}->{rng}")
+        return ", ".join(parts)
 
 
 def _pad_to_lanes(n: int, align: int = 1) -> int:
@@ -96,24 +135,51 @@ def _pad_to_lanes(n: int, align: int = 1) -> int:
 
 
 def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                 align: int = 1) -> BucketLayout:
+                 align: int = 1,
+                 groups: Optional[Tuple[int, ...]] = None) -> BucketLayout:
     """Plan buckets for ``tree`` (arrays or ShapeDtypeStructs).
 
     ``align`` pads every bucket to a multiple of ``align * 128`` elements
     instead of plain 128 — the sharded-replica path (core/replica.py,
     DESIGN.md §10) passes the intra-pod shard count so each bucket splits
     into ``align`` equal, lane-aligned shard slices.
+
+    ``groups`` makes the layout **layer-aware** (DESIGN.md §11): one int
+    per leaf in canonical tree order, mapping the leaf to an ordered layer
+    id.  Buckets never span groups — leaves are packed group by group in
+    ascending group order (canonical order within a group), and every open
+    bucket closes at a group boundary — so the streamed FSDP engine can
+    gather exactly one layer span's buckets at a time.  The greedy
+    dtype/budget fill restarts per group, which makes the group's slice of
+    the layout identical to ``build_layout`` of the group's sub-tree alone
+    (pinned by tests; the plan's per-group sublayout views rely on it).
+    A single layer larger than the budget still splits into several
+    buckets of its own (oversize leaves keep their own bucket) — never
+    into a shared one.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     metas = [(int(np.prod(l.shape, dtype=np.int64)), tuple(l.shape),
               np.dtype(l.dtype)) for l in leaves]
+    if groups is not None and len(groups) != len(metas):
+        raise ValueError(f"groups has {len(groups)} entries for "
+                         f"{len(metas)} leaves")
 
-    # dtype groups in first-appearance order, greedy fill in leaf order
+    # Fill order: canonical leaf order, or (group, canonical) when grouped.
+    order = list(range(len(metas)))
+    if groups is not None:
+        order.sort(key=lambda li: (groups[li], li))
+
     slot_of_leaf: Dict[int, _LeafSlot] = {}
     bucket_sizes: list = []
     bucket_dtypes: list = []
+    bucket_groups: list = []
     open_bucket: Dict[np.dtype, int] = {}     # dtype -> open bucket index
-    for li, (size, shape, dtype) in enumerate(metas):
+    cur_group = None
+    for li in order:
+        size, shape, dtype = metas[li]
+        if groups is not None and groups[li] != cur_group:
+            cur_group = groups[li]
+            open_bucket = {}                  # buckets never span groups
         bi = open_bucket.get(dtype)
         if bi is not None:
             would_be = (bucket_sizes[bi] + size) * dtype.itemsize
@@ -123,13 +189,15 @@ def build_layout(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
             bi = len(bucket_sizes)
             bucket_sizes.append(0)
             bucket_dtypes.append(dtype)
+            bucket_groups.append(cur_group)
             open_bucket[dtype] = bi
         slot_of_leaf[li] = _LeafSlot(bi, bucket_sizes[bi], size, shape, dtype)
         bucket_sizes[bi] += size
 
     bucket_sizes = [_pad_to_lanes(s, align) for s in bucket_sizes]
     return BucketLayout(treedef, tuple(slot_of_leaf[i] for i in range(len(metas))),
-                        tuple(bucket_sizes), tuple(bucket_dtypes))
+                        tuple(bucket_sizes), tuple(bucket_dtypes),
+                        tuple(bucket_groups) if groups is not None else ())
 
 
 _LAYOUT_CACHE: Dict[tuple, BucketLayout] = {}
@@ -161,23 +229,25 @@ def layout_cache_stats() -> dict:
 
 
 def layout_for(tree, *, max_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-               align: int = 1) -> BucketLayout:
+               align: int = 1,
+               groups: Optional[Tuple[int, ...]] = None) -> BucketLayout:
     """Cached :func:`build_layout` keyed on structure, not array identity.
 
     The key is exactly what the layout is a function of — treedef, per-leaf
-    (shape, dtype), the byte budget, and the shard alignment.  Anything
-    else a caller threads around (phase offset, averaging dtype, overlap
-    mode) must NOT enter the key: re-tracing every phase variant of a step
-    reuses one layout.
+    (shape, dtype), the byte budget, the shard alignment, and the per-leaf
+    layer groups.  Anything else a caller threads around (phase offset,
+    averaging dtype, overlap mode) must NOT enter the key: re-tracing every
+    phase variant of a step reuses one layout.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     key = (treedef, tuple((tuple(l.shape), np.dtype(l.dtype).str)
-                          for l in leaves), max_bucket_bytes, align)
+                          for l in leaves), max_bucket_bytes, align, groups)
     layout = _LAYOUT_CACHE.get(key)
     if layout is None:
         _LAYOUT_STATS["misses"] += 1
         layout = _LAYOUT_CACHE[key] = build_layout(
-            tree, max_bucket_bytes=max_bucket_bytes, align=align)
+            tree, max_bucket_bytes=max_bucket_bytes, align=align,
+            groups=groups)
     else:
         _LAYOUT_STATS["hits"] += 1
     return layout

@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.core import bucketing, grouping
 from repro.core import overlap as pipeline
+from repro.core import streaming
 from repro.core.replica import REPLICATED, ShardingPolicy
 
 
@@ -191,6 +192,44 @@ class Topology:
 
     def classes_in_use(self) -> Tuple[int, ...]:
         return tuple(sorted(set(self.axis_class)))
+
+    def with_measured(self, path: str) -> "Topology":
+        """This topology with calibrated link constants loaded from disk.
+
+        ``path`` is a ``LINK_CONSTANTS.json`` written by
+        ``benchmarks/calibrate_links.py`` (ROADMAP: measured alpha/beta/
+        gamma constants): per mesh axis, the microbenched collective launch
+        latency, inverse wire bandwidth, and combine throughput.  Each link
+        class takes the *slowest* measurement among its axes (conservative
+        — the class cost model prices the class's worst link).  A class's
+        alpha/beta price BOTH the butterfly ppermutes and the FSDP
+        all-gather/reduce-scatter path (``modeled_fsdp_step_seconds``), so
+        when the file also carries ``ag_alpha``/``ag_beta`` the class takes
+        the slower of the ppermute and all-gather measurements.  Classes
+        with no measured axis keep their assumed defaults, and pinned
+        ``bucket_bytes`` survive.
+        """
+        import json
+        with open(path) as f:
+            data = json.load(f)
+        axes = data.get("axes", {})
+        new_classes = []
+        for ci, link in enumerate(self.link_classes):
+            ms = [axes[a] for a, c in zip(self.axis_names, self.axis_class)
+                  if c == ci and a in axes]
+            if not ms:
+                new_classes.append(link)
+                continue
+            new_classes.append(LinkClass(
+                link.name + "@measured",
+                alpha=max(max(float(m["alpha"]),
+                              float(m.get("ag_alpha", 0.0))) for m in ms),
+                beta=max(max(float(m["beta"]),
+                             float(m.get("ag_beta", 0.0))) for m in ms),
+                gamma=max(float(m.get("gamma", link.gamma)) for m in ms),
+                bucket_bytes=link.bucket_bytes))
+        return Topology(self.axis_names, self.axis_sizes,
+                        tuple(new_classes), self.axis_class)
 
     def describe(self) -> str:
         parts = []
@@ -421,6 +460,73 @@ def modeled_fsdp_step_seconds(payload_bytes: int, topology: Topology,
     }
 
 
+def modeled_streamed_fsdp_step_seconds(
+        payload_bytes: int, topology: Topology, S: int, *, shard_axis: str,
+        n_spans: int, span_fwd_compute_s: float, tau: int = 10,
+        overlap: bool = True, bucket_bytes: Optional[int] = None) -> dict:
+    """Step model for the layer-streamed FSDP engine (DESIGN.md §11).
+
+    The gather-all step pays ``sum(gather) + compute + sum(scatter)``
+    serially and pins the full gathered tree; the streamed step pays
+    ``max(compute, gather)`` per layer span plus pipeline fill/drain, and
+    holds at most ~two gathered spans.  Backward re-gathers (span-level
+    remat) double the gather wire — the model charges them, and the win
+    survives whenever span compute covers span gather.  The averaging
+    (butterfly + tau-sync) term is identical to
+    :func:`modeled_fsdp_step_seconds`.
+    """
+    base = modeled_fsdp_step_seconds(
+        payload_bytes, topology, S, shard_axis=shard_axis, tau=tau,
+        overlap=overlap, bucket_bytes=bucket_bytes)
+    ax = topology.axis_names.index(shard_axis)
+    k = topology.axis_sizes[ax]
+    shard_link = topology.link_classes[topology.axis_class[ax]]
+    payload = max(int(payload_bytes), 1)
+    n = max(int(n_spans), 1)
+    span_payload = payload / n
+    # spans bucket at the shard layout's budget (the butterfly class's)
+    eff = topology.drop_axis(shard_axis)
+    butterfly_link = max((topology.link_classes[ci]
+                          for ci in eff.classes_in_use()),
+                         key=lambda l: l.beta)
+    ag_budget = bucket_bytes if bucket_bytes is not None else \
+        choose_class_bucket_bytes(payload, butterfly_link, overlap=overlap)
+    span_buckets = max(1, -(-int(span_payload) // ag_budget))
+    span_wire = span_payload * (k - 1) / k * shard_link.beta
+    ag_span = span_buckets * shard_link.alpha + span_wire   # one span gather
+    rs_span = ag_span                                       # mirror scatter
+    fwd_c = float(span_fwd_compute_s)
+    bwd_c = 2.0 * fwd_c
+
+    # gather-all execution: every gather lands before the first flop
+    exec_gather_all = n * (ag_span + fwd_c + bwd_c + rs_span)
+    # streamed: fill with the first gather, then max(compute, comm) per
+    # span; the backward overlaps re-gather + scatter with the 2x compute
+    exec_streamed = (ag_span + n * max(fwd_c, ag_span)
+                     + n * max(bwd_c, ag_span + rs_span) + rs_span)
+    averaging_s = base["step_s"] - base["gather_scatter_s"]
+    step_s = averaging_s + exec_streamed
+    gather_all_step_s = averaging_s + exec_gather_all
+    return {
+        "payload_bytes": payload, "P": topology.P, "pod_size": k,
+        "S": S, "tau": tau, "n_spans": n,
+        "span_payload_bytes": span_payload,
+        "span_buckets": span_buckets,
+        "span_gather_s": ag_span, "span_fwd_compute_s": fwd_c,
+        "exec_streamed_s": exec_streamed,
+        "exec_gather_all_s": exec_gather_all,
+        "averaging_s": averaging_s,
+        "step_s": step_s, "gather_all_step_s": gather_all_step_s,
+        "streamed_win": gather_all_step_s / max(step_s, 1e-30),
+        # peak transient gathered bytes: full tree vs ~2 spans in flight
+        # (clamped — the engine's liveness peak can never exceed the tree,
+        # and for n_spans <= 2 "two spans" IS the whole tree)
+        "peak_gathered_bytes_full": float(payload),
+        "peak_gathered_bytes_streamed": min(2.0 * span_payload,
+                                            float(payload)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Combine kernels (moved from group_allreduce)
 # ---------------------------------------------------------------------------
@@ -546,6 +652,17 @@ class AveragingPlan:
                                   or bucketing.DEFAULT_BUCKET_BYTES)
         self._runs: Dict[int, Tuple[StageRun, ...]] = {}
         self._shard_layout: Optional[bucketing.BucketLayout] = None
+        # layer-streamed state layout (DESIGN.md §11): derive the ordered
+        # leaf groups from the layered tree convention up front so a
+        # non-layered tree fails at compile time, not first gather
+        if sharding.is_sharded and sharding.streamed:
+            self._stream_groups = streaming.layered_leaf_groups(
+                storage_struct)
+            self.n_stream_spans = len(storage_struct["layers"])
+        else:
+            self._stream_groups = None
+            self.n_stream_spans = 0
+        self._stream_sublayouts: Dict[int, bucketing.BucketLayout] = {}
 
     # -- static schedule ---------------------------------------------------
     @property
@@ -597,7 +714,8 @@ class AveragingPlan:
             self._shard_layout = bucketing.layout_for(
                 self.storage_struct,
                 max_bucket_bytes=self.shard_bucket_bytes,
-                align=self.shard_size)
+                align=self.shard_size,
+                groups=self._stream_groups)
         return self._shard_layout
 
     @property
@@ -662,6 +780,112 @@ class AveragingPlan:
                                            tiled=True) * inv
             out.append(buf)
         return tuple(out)
+
+    # -- layer-streamed gather/scatter (DESIGN.md §11) ---------------------
+    def _require_streamed(self):
+        if self._stream_groups is None:
+            raise ValueError(
+                "stream_* needs a streamed plan: compile with "
+                "ShardingPolicy.fsdp_within_pod(axis, streamed=True) over "
+                "the layered param tree")
+
+    def stream_bucket_indices(self, group: int) -> Tuple[int, ...]:
+        """Global bucket indices holding one stream group's leaves."""
+        self._require_streamed()
+        return self.shard_layout.group_bucket_indices(group)
+
+    def stream_group_template(self, group: int):
+        """The group's sub-SDS-tree of the layered storage struct."""
+        self._require_streamed()
+        if group == streaming.STEM_GROUP:
+            return self.storage_struct["stem"]
+        if group == streaming.head_group(self.n_stream_spans):
+            return self.storage_struct["head"]
+        return self.storage_struct["layers"][group - 1]
+
+    def stream_sublayout(self, group: int) -> bucketing.BucketLayout:
+        """Pack/unpack layout of ONE group's buckets (a layout view).
+
+        Because the grouped global layout restarts its greedy fill at every
+        group boundary, laying out the group's sub-tree alone at the same
+        budget/alignment reproduces exactly the global layout's slice for
+        that group — asserted here once per group, then cached.
+        """
+        self._require_streamed()
+        lay = self._stream_sublayouts.get(group)
+        if lay is not None:
+            return lay
+        lay = bucketing.layout_for(
+            self.stream_group_template(group),
+            max_bucket_bytes=self.shard_bucket_bytes, align=self.shard_size)
+        idxs = self.stream_bucket_indices(group)
+        glob = self.shard_layout
+        if (lay.n_buckets != len(idxs)
+                or tuple(lay.bucket_sizes) != tuple(
+                    glob.bucket_sizes[i] for i in idxs)
+                or tuple(lay.bucket_dtypes) != tuple(
+                    glob.bucket_dtypes[i] for i in idxs)):
+            raise AssertionError(
+                f"group {group} sublayout diverged from the global grouped "
+                f"layout: {lay.describe()} vs global buckets {idxs}")
+        self._stream_sublayouts[group] = lay
+        return lay
+
+    def stream_unshard(self, shards, group: int, *, barrier: bool = False):
+        """One group's shard slices -> its full sub-tree (all-gather on ICI).
+
+        ``barrier=True`` fences the operands through
+        ``lax.optimization_barrier`` — backward *re*-gathers must not CSE
+        with the forward gathers, or XLA keeps the forward buffers alive
+        and the streamed memory bound silently degrades to gather-all.
+        """
+        self._require_streamed()
+        ax = self.sharding.shard_axis
+        bufs = tuple(shards[i] for i in self.stream_bucket_indices(group))
+        if barrier:
+            bufs = streaming._barrier(bufs)
+        gathered = tuple(
+            jax.lax.all_gather(b, ax, tiled=True) if b.size else
+            jnp.zeros((0,), b.dtype) for b in bufs)
+        return bucketing.unpack(gathered, self.stream_sublayout(group))
+
+    def stream_grad_shards(self, grad_subtree, group: int) -> tuple:
+        """One group's full-tree grads -> owned fp32 pod-mean slices.
+
+        The exact per-group mirror of :meth:`grad_shards`: cast-to-fp32
+        pack into the group's buckets, tiled ``psum_scatter`` over the
+        shard axis, scale by 1/shard_size — so streamed gradients are
+        bit-identical to the gather-all path's.
+        """
+        self._require_streamed()
+        ax = self.sharding.shard_axis
+        inv = 1.0 / self.shard_size
+        out = []
+        for buf in bucketing.pack(grad_subtree, self.stream_sublayout(group),
+                                  dtype=jnp.float32):
+            if buf.size:
+                buf = jax.lax.psum_scatter(buf, ax, scatter_dimension=0,
+                                           tiled=True) * inv
+            out.append(buf)
+        return tuple(out)
+
+    def stream_group_bytes(self) -> Dict[int, int]:
+        """Gathered (padded storage) bytes per stream group."""
+        self._require_streamed()
+        lay = self.shard_layout
+        return {g: lay.group_bytes(g) for g in sorted(set(lay.bucket_groups))}
+
+    def stream_peak_gathered_bytes(self) -> int:
+        """Peak gathered bytes of the streamed schedule (liveness walk)."""
+        self._require_streamed()
+        return streaming.max_in_flight_gathered_bytes(
+            self.stream_group_bytes(), self.n_stream_spans)
+
+    def full_gathered_bytes(self) -> int:
+        """Transient bytes of a gather-all unshard (every padded bucket)."""
+        lay = self.shard_layout
+        return sum(s * d.itemsize
+                   for s, d in zip(lay.bucket_sizes, lay.bucket_dtypes))
 
     # -- execution: the paper's group butterfly ----------------------------
     def average(self, tree, phase: int):
@@ -935,6 +1159,17 @@ class AveragingPlan:
                 f"{self.shard_bucket_bytes / 2**20:.0f}MiB -> "
                 f"{self.shard_layout.n_buckets} buckets x "
                 f"{self.shard_size} slices")
+            if self._stream_groups is not None:
+                lay = self.shard_layout
+                lines.append(
+                    f"  layer map ({self.n_stream_spans} spans + stem/head):"
+                    f" {lay.describe_groups()}")
+                lines.append(
+                    f"  streamed coverage: peak gathered "
+                    f"{self.stream_peak_gathered_bytes() / 2**20:.2f}MiB "
+                    f"of {self.full_gathered_bytes() / 2**20:.2f}MiB "
+                    f"full-tree ({streaming.expected_stream_gathers(self)} "
+                    f"gathers/step fwd+bwd)")
         else:
             for ci in self.topology.classes_in_use():
                 link = self.topology.link_classes[ci]
@@ -949,6 +1184,9 @@ class AveragingPlan:
             lines.append(f"  phase {ph} (offset {off}): {runs}")
         lines.append(f"  sync: pmean budget "
                      f"{self.sync_bucket_bytes / 2**20:.0f}MiB")
+        stats = bucketing.layout_cache_stats()
+        lines.append(f"  layout cache: {stats['hits']} hits / "
+                     f"{stats['misses']} misses")
         return "\n".join(lines)
 
 

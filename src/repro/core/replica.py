@@ -64,9 +64,18 @@ class ShardingPolicy:
     intra-pod/ICI axis of the plan's Topology — validated at compile time).
     Part of the plan-compilation cache key, so a plan owns exactly one
     sharded execution realisation.
+
+    ``streamed`` (fsdp only, DESIGN.md §11) selects the layer-streamed
+    state layout: the shard buckets are laid out over the model's
+    *layered* param tree (``{"stem", "layers", "head"}`` — see
+    ``models/common.LayeredModel``) with a layer-aware
+    :class:`~repro.core.bucketing.BucketLayout`, so the train step can
+    all-gather one layer span's buckets while the previous span computes
+    instead of gathering the whole tree up front.
     """
     kind: str = REPLICATED_KIND
     shard_axis: Optional[str] = None
+    streamed: bool = False
 
     def __post_init__(self):
         if self.kind not in (REPLICATED_KIND, FSDP_KIND):
@@ -75,14 +84,17 @@ class ShardingPolicy:
             raise ValueError("fsdp_within_pod needs a shard_axis")
         if self.kind == REPLICATED_KIND and self.shard_axis is not None:
             raise ValueError("replicated policy takes no shard_axis")
+        if self.streamed and self.kind != FSDP_KIND:
+            raise ValueError("streamed layout requires fsdp_within_pod")
 
     @classmethod
     def replicated(cls) -> "ShardingPolicy":
         return cls(REPLICATED_KIND)
 
     @classmethod
-    def fsdp_within_pod(cls, shard_axis: str) -> "ShardingPolicy":
-        return cls(FSDP_KIND, shard_axis)
+    def fsdp_within_pod(cls, shard_axis: str,
+                        streamed: bool = False) -> "ShardingPolicy":
+        return cls(FSDP_KIND, shard_axis, streamed)
 
     @property
     def is_sharded(self) -> bool:
@@ -90,7 +102,8 @@ class ShardingPolicy:
 
     def describe(self) -> str:
         if self.is_sharded:
-            return f"fsdp_within_pod(shard_axis={self.shard_axis!r})"
+            return (f"fsdp_within_pod(shard_axis={self.shard_axis!r}"
+                    + (", streamed" if self.streamed else "") + ")")
         return "replicated"
 
 
@@ -257,6 +270,47 @@ def replicated_to_fsdp_state(state: ReplicaState, plan) -> ReplicaState:
         lambda t: replicated_to_sharded_tree(t, plan, dtype=jnp.float32),
         lambda c: jnp.asarray(np.asarray(c)[first_member]))
     return ReplicaState(params, opt, state.step, state.phase)
+
+
+def merge_layered_state(state: ReplicaState, layered) -> ReplicaState:
+    """Replicated state in stacked-LAYERED structure -> canonical structure.
+
+    A streamed-fsdp checkpoint converts to the replicated layout in the
+    layered tree ``{"stem", "layers", "head"}`` (the streamed plan's
+    storage structure); ``layered`` (the model's
+    :class:`~repro.models.common.LayeredModel`) merges each replica row
+    back into the canonical stacked tree — pure restructuring, bit-exact.
+    """
+    merge_rows = jax.vmap(layered.merge)
+    return ReplicaState(merge_rows(state.params),
+                        map_opt_state(state.opt_state, merge_rows,
+                                      lambda c: c),
+                        state.step, state.phase)
+
+
+def split_layered_state(state: ReplicaState, layered) -> ReplicaState:
+    """Canonical-structure replicated state -> stacked-LAYERED structure."""
+    split_rows = jax.vmap(layered.split)
+    return ReplicaState(split_rows(state.params),
+                        map_opt_state(state.opt_state, split_rows,
+                                      lambda c: c),
+                        state.step, state.phase)
+
+
+def canonical_replicated_template(layered_template: ReplicaState,
+                                  layered) -> ReplicaState:
+    """Abstract canonical-stacked twin of a layered-stacked template.
+
+    ``replicated_state_template`` of a *streamed* plan produces the
+    layered structure (the plan's storage struct); replicated runs save
+    and restore the canonical tree, so cross-policy restore derives the
+    canonical template by shape-evaluating the row-wise merge.
+    """
+    merge_rows = lambda t: jax.eval_shape(jax.vmap(layered.merge), t)
+    return ReplicaState(merge_rows(layered_template.params),
+                        map_opt_state(layered_template.opt_state,
+                                      merge_rows, lambda c: c),
+                        layered_template.step, layered_template.phase)
 
 
 def sharded_state_template(plan, opt_state_like) -> ReplicaState:

@@ -272,6 +272,14 @@ class CommReport:
     fsdp_pod_size: int = 1
     t_fsdp: float = 0.0               # modeled sharded step seconds
     gather_scatter_s: float = 0.0     # per-step AG+RS overhead on ICI
+    # transient gathered-buffer footprint (DESIGN.md §11): the gather-all
+    # step pins the whole gathered tree through fwd/bwd; the layer-streamed
+    # engine holds ~2 layer spans
+    peak_gathered_bytes: float = 0.0          # gather-all full-tree transient
+    peak_gathered_bytes_streamed: float = 0.0  # streamed ~2-span bound
+    t_fsdp_streamed: float = 0.0      # streamed step incl. compute overlap
+    t_fsdp_gather_all: float = 0.0    # same model, serial gather-then-compute
+    streamed_win: float = 1.0         # gather_all / streamed step ratio
 
 
 def replica_memory_bytes(payload_bytes: float, *, pod_size: int = 1,
@@ -303,6 +311,8 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
                         gamma: float = group_allreduce.DEFAULT_GAMMA,
                         topology=None, fsdp_shard_axis: str = None,
                         fsdp_S: int = None,
+                        fsdp_streamed_spans: int = None,
+                        span_fwd_compute_s: float = 0.0,
                         opt_bytes_ratio: float = 2.0) -> CommReport:
     """Per-step averaging wall time: per-leaf vs bucketed vs overlapped.
 
@@ -326,7 +336,15 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
     modeled sharded step time (butterfly on 1/pod_size of the payload,
     plus the per-step all-gather/reduce-scatter overhead on the shard
     link class — ``plan.modeled_fsdp_step_seconds``), with ``fsdp_S``
-    the pod-level group size (default: sqrt of the pod count).
+    the pod-level group size (default: sqrt of the pod count), and the
+    gather-all transient ``peak_gathered_bytes`` (the whole gathered tree
+    is live through fwd/bwd).
+
+    ``fsdp_streamed_spans`` (with ``span_fwd_compute_s``, the forward
+    compute seconds of one layer span) adds the layer-streamed engine's
+    fields (DESIGN.md §11, ``plan.modeled_streamed_fsdp_step_seconds``):
+    per-span ``max(compute, gather)`` step time vs the serial
+    gather-then-compute reference, and the ~2-span streamed peak.
 
     ``payload_bytes`` overrides the ``param_count``-estimated payload with
     an exact figure (e.g. from ``jax.eval_shape`` on the real model), so
@@ -390,6 +408,19 @@ def averaging_comm_cost(cfg: ModelConfig, *, P: int, S: int, tau: int = 10,
             rep.fsdp_pod_size = pod
             rep.t_fsdp = fsdp["step_s"]
             rep.gather_scatter_s = fsdp["gather_scatter_s"]
+            rep.peak_gathered_bytes = float(payload)
+            if fsdp_streamed_spans:
+                streamed = plan_mod.modeled_streamed_fsdp_step_seconds(
+                    int(payload), topology, S_eff,
+                    shard_axis=fsdp_shard_axis,
+                    n_spans=fsdp_streamed_spans,
+                    span_fwd_compute_s=span_fwd_compute_s, tau=tau,
+                    overlap=True)
+                rep.t_fsdp_streamed = streamed["step_s"]
+                rep.t_fsdp_gather_all = streamed["gather_all_step_s"]
+                rep.streamed_win = streamed["streamed_win"]
+                rep.peak_gathered_bytes_streamed = \
+                    streamed["peak_gathered_bytes_streamed"]
     return rep
 
 

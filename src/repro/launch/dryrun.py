@@ -171,7 +171,8 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
                group_size=None, donate: bool = True,
                average_dtype: str = "float32", microbatch=None,
                cfg_overrides: dict = None, hierarchical: bool = False,
-               sharding: str = "replicated", smoke: bool = False):
+               sharding: str = "replicated", streamed: bool = False,
+               smoke: bool = False):
     """Build + lower + compile one (arch, shape) on the given mesh.
 
     Tuning knobs for the §Perf hillclimb: ``mesh`` may be any logical
@@ -201,7 +202,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
             names, sizes = dp_axis_layout(
                 mesh.axis_names, dict(mesh.shape),
                 tuple(a for a in mesh.axis_names if a in ("pod", "data")))
-            policy = resolve_sharding(sharding, names)
+            policy = resolve_sharding(sharding, names, streamed=streamed)
             kw = {"sharding": policy}
             if averager == "wagma":
                 kw["average_dtype"] = average_dtype
@@ -255,7 +256,12 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
     colls = collective_summary(hlo, halve_kinds=tuple(halve))
     bucket_colls = None
     if av is not None:
-        if av.sharding.is_sharded:
+        if av.sharding.is_sharded and av.sharding.streamed:
+            # streamed plans compile over the layered tree (layer-aware
+            # shard layout, DESIGN.md §11)
+            from repro.train.train_step import _layered_shapes
+            local_params = _layered_shapes(model)
+        elif av.sharding.is_sharded:
             # the sharded plan was compiled from the full model tree at
             # state-init time; hand the summary the same structure
             local_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -298,6 +304,51 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
             bucket_colls["gather_scatter_by_axis"] = ag
             bucket_colls["fsdp_gather_leaks"] = leaks
             bucket_colls["fsdp_gathers_intra_pod_only"] = not leaks
+        if av.sharding.is_sharded and av.sharding.streamed:
+            # streamed invariants (DESIGN.md §11), cross-checked in HLO:
+            # (a) no single all-gather exceeds one layer-span bucket (a
+            #     gather-all regression reappears as a full-tree-sized
+            #     gather), (b) the all-gather count on the shard axis
+            #     equals the schedule's fwd+bwd expectation (a CSE'd
+            #     backward re-gather silently pins forward buffers and
+            #     shows up as a shortfall), (c) the schedule's own peak
+            #     stays under the two-span bound vs the full tree
+            from repro.core import streaming
+            from repro.launch.hlo_analysis import grouped_collective_details
+            plan = av.plan_for(local_params)
+            lay = plan.shard_layout
+            # XLA-CPU widens bf16 collectives to f32 (see
+            # hlo_analysis.collective_summary), so the per-op bound uses
+            # the widened itemsize; on TPU the payload stays narrow
+            max_bucket = max(
+                (s * max(d.itemsize, 4) for s, d in zip(lay.bucket_sizes,
+                                                        lay.bucket_dtypes)),
+                default=0)
+            details = grouped_collective_details(
+                hlo, tuple(mesh.axis_names),
+                tuple(mesh.shape[a] for a in mesh.axis_names))
+            shard_ax = av.sharding.shard_axis
+            ags = [d for d in details
+                   if d["kind"] == "all-gather" and d["axis"] == shard_ax]
+            expected_ags = streaming.expected_stream_gathers(plan)
+            oversize = [d for d in ags if d["tensor_bytes"] > max_bucket]
+            stream_report = {
+                "expected_gathers": expected_ags,
+                "hlo_gathers_on_shard_axis": len(ags),
+                "gathers_match": len(ags) == expected_ags,
+                "max_gather_bytes": max(
+                    (d["tensor_bytes"] for d in ags), default=0),
+                "max_span_bucket_bytes": max_bucket,
+                "oversize_gathers": len(oversize),
+                "peak_gathered_bytes": plan.stream_peak_gathered_bytes(),
+                "full_gathered_bytes": plan.full_gathered_bytes(),
+                "layer_bucket_map": lay.describe_groups(),
+            }
+            stream_report["ok"] = (stream_report["gathers_match"]
+                                   and not oversize
+                                   and stream_report["peak_gathered_bytes"]
+                                   < stream_report["full_gathered_bytes"])
+            bucket_colls["streamed"] = stream_report
         print("  " + bucket_colls["plan_summary"].replace("\n", "\n  "),
               flush=True)
     n_dp = 1
@@ -359,6 +410,13 @@ def main():
                     help="fsdp: FSDP-within-pod sharded replicas "
                          "(DESIGN.md §10); the run fails if any parameter "
                          "all-gather leaks off the intra-pod shard axis")
+    ap.add_argument("--streamed", action="store_true",
+                    help="with --sharding fsdp: layer-streamed execution "
+                         "engine (DESIGN.md §11) — the run fails if any "
+                         "gather leaves the intra-pod axis, any single "
+                         "all-gather exceeds one layer-span bucket, or the "
+                         "shard-axis gather count mismatches the streamed "
+                         "schedule (CSE'd backward re-gathers)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced smoke configs (CI-sized compile)")
     ap.add_argument("--mesh-shape", default=None,
@@ -397,18 +455,26 @@ def main():
             tag += "__hier"
         if args.sharding != "replicated":
             tag += f"__{args.sharding}"
+        if args.streamed:
+            tag += "__streamed"
         print(f"=== {tag} ===", flush=True)
         try:
             res = lower_pair(arch, shape, mesh, averager=args.averager,
                              group_size=args.group_size,
                              hierarchical=args.hierarchical,
-                             sharding=args.sharding, smoke=args.smoke)
+                             sharding=args.sharding, streamed=args.streamed,
+                             smoke=args.smoke)
             if res.get("bucket_collectives") and \
                     res["bucket_collectives"].get(
                         "fsdp_gathers_intra_pod_only") is False:
                 res["status"] = "error"
                 res["error"] = ("fsdp all-gather leak: " + str(
                     res["bucket_collectives"]["fsdp_gather_leaks"]))
+            stream_rep = (res.get("bucket_collectives") or {}).get("streamed")
+            if stream_rep and not stream_rep["ok"]:
+                res["status"] = "error"
+                res["error"] = ("streamed invariant violated: "
+                                + str(stream_rep))
         except Exception as e:
             res = {"status": "error", "error": f"{type(e).__name__}: {e}",
                    "trace": traceback.format_exc()[-2000:]}

@@ -205,6 +205,38 @@ _PAIRS_RE = re.compile(
     r"source_target_pairs=\{((?:\{\d+,\s*\d+\},?)*)\}")
 
 
+def _coords_fn(axis_sizes: Sequence[int]):
+    """device id -> mesh coordinates (C-order over axis_sizes, maj-to-min).
+
+    Shared by every HLO-side mesh classifier below — the device-id
+    convention must stay identical between the permute, axis-count, and
+    per-op-detail parsers or their cross-checks disagree.
+    """
+    sizes = [int(s) for s in axis_sizes]
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+
+    def coords(dev: int) -> Tuple[int, ...]:
+        return tuple((dev // strides[i]) % sizes[i] for i in range(len(sizes)))
+
+    return coords, len(sizes)
+
+
+def _replica_groups_axes(groups_blob: str, coords) -> set:
+    """Mesh-axis indices an op's explicit ``replica_groups`` span."""
+    axes: set = set()
+    for grp in re.findall(r"\{([\d,\s]+)\}", "{" + groups_blob + "}"):
+        members = [int(x) for x in grp.replace(" ", "").split(",") if x]
+        if len(members) < 2:
+            continue
+        base = coords(members[0])
+        for dev in members[1:]:
+            c = coords(dev)
+            axes.update(i for i in range(len(base)) if c[i] != base[i])
+    return axes
+
+
 def permute_axis_counts(hlo_text: str, axis_names: Sequence[str],
                         axis_sizes: Sequence[int]) -> Dict[str, int]:
     """Classify each compiled collective-permute by the mesh axis it moves.
@@ -220,13 +252,7 @@ def permute_axis_counts(hlo_text: str, axis_names: Sequence[str],
     separately, not just in aggregate.
     """
     names = list(axis_names)
-    sizes = [int(s) for s in axis_sizes]
-    strides = [1] * len(sizes)
-    for i in range(len(sizes) - 2, -1, -1):
-        strides[i] = strides[i + 1] * sizes[i + 1]
-
-    def coords(dev: int) -> Tuple[int, ...]:
-        return tuple((dev // strides[i]) % sizes[i] for i in range(len(sizes)))
+    coords, n_axes = _coords_fn(axis_sizes)
 
     counts: Dict[str, int] = {}
     for line in hlo_text.splitlines():
@@ -240,7 +266,7 @@ def permute_axis_counts(hlo_text: str, axis_names: Sequence[str],
             if s == t:
                 continue
             cs, ct = coords(s), coords(t)
-            moved = [i for i in range(len(sizes)) if cs[i] != ct[i]]
+            moved = [i for i in range(n_axes) if cs[i] != ct[i]]
             axes.update(moved if len(moved) == 1 else [-1])
         if not axes:
             continue
@@ -276,13 +302,7 @@ def collective_axis_counts(hlo_text: str, axis_names: Sequence[str],
     classified onto a DCN axis is a leak of the sharding invariant.
     """
     names = list(axis_names)
-    sizes = [int(s) for s in axis_sizes]
-    strides = [1] * len(sizes)
-    for i in range(len(sizes) - 2, -1, -1):
-        strides[i] = strides[i + 1] * sizes[i + 1]
-
-    def coords(dev: int) -> Tuple[int, ...]:
-        return tuple((dev // strides[i]) % sizes[i] for i in range(len(sizes)))
+    coords, _ = _coords_fn(axis_sizes)
 
     counts: Dict[str, Dict[str, int]] = {}
     for line in hlo_text.splitlines():
@@ -290,21 +310,48 @@ def collective_axis_counts(hlo_text: str, axis_names: Sequence[str],
         if not m or m.group(1) not in kinds:
             continue
         kind = m.group(1)
-        axes = set()
-        for grp in re.findall(r"\{([\d,\s]+)\}", "{" + m.group(2) + "}"):
-            members = [int(x) for x in grp.replace(" ", "").split(",") if x]
-            if len(members) < 2:
-                continue
-            base = coords(members[0])
-            for dev in members[1:]:
-                c = coords(dev)
-                axes.update(i for i in range(len(sizes)) if c[i] != base[i])
+        axes = _replica_groups_axes(m.group(2), coords)
         if not axes:
             continue
         key = names[axes.pop()] if len(axes) == 1 else "mixed"
         ent = counts.setdefault(kind, {})
         ent[key] = ent.get(key, 0) + 1
     return counts
+
+
+def grouped_collective_details(hlo_text: str, axis_names: Sequence[str],
+                               axis_sizes: Sequence[int],
+                               kinds: Sequence[str] = ("all-gather",
+                                                       "reduce-scatter")
+                               ) -> List[dict]:
+    """Per-op records ``{kind, axis, tensor_bytes}`` for grouped collectives.
+
+    The per-op companion to :func:`collective_axis_counts`: besides
+    classifying each op's replica groups onto a mesh axis, it records the
+    op's **output tensor bytes** (for an all-gather that is the gathered
+    buffer — the quantity the streamed-FSDP in-flight bound constrains).
+    The ``--sharding fsdp --streamed`` dry-run smoke asserts no single
+    all-gather exceeds the largest layer-span bucket: a gather-all
+    regression would reappear as one big full-bucket gather.
+    """
+    names = list(axis_names)
+    coords, _ = _coords_fn(axis_sizes)
+
+    out: List[dict] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip().rstrip(",")
+        m = _GROUPED_RE.search(stripped)
+        if not m or m.group(1) not in kinds or "=" not in stripped:
+            continue
+        kind = m.group(1)
+        rhs = stripped.split("=", 1)[1].strip()
+        nbytes = _tensor_bytes(rhs.split(kind)[0])
+        axes = _replica_groups_axes(m.group(2), coords)
+        if not axes:
+            continue
+        axis = names[axes.pop()] if len(axes) == 1 else "mixed"
+        out.append({"kind": kind, "axis": axis, "tensor_bytes": nbytes})
+    return out
 
 
 def count_ppermutes(jaxpr) -> int:

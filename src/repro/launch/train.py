@@ -33,34 +33,46 @@ from repro.checkpoint import save_replica_state
 from repro import compat
 
 
-def resolve_sharding(sharding, dp_names) -> ShardingPolicy:
+def resolve_sharding(sharding, dp_names, streamed: bool = False
+                     ) -> ShardingPolicy:
     """CLI/ctor spelling -> ShardingPolicy.
 
     ``None``/``"replicated"`` -> replicated; ``"fsdp"`` shards over the
-    minor (intra-pod) dp axis; a ready ShardingPolicy passes through.
+    minor (intra-pod) dp axis; ``streamed=True`` (or the ``"fsdp_streamed"``
+    spelling) selects the layer-streamed state layout (DESIGN.md §11); a
+    ready ShardingPolicy passes through.
     """
-    if sharding is None or sharding == "replicated":
-        return REPLICATED
     if isinstance(sharding, ShardingPolicy):
+        if streamed and not sharding.streamed:
+            import dataclasses
+            return dataclasses.replace(sharding, streamed=True)
         return sharding
+    if sharding == "fsdp_streamed":
+        sharding, streamed = "fsdp", True
+    if sharding is None or sharding == "replicated":
+        if streamed:
+            raise ValueError("--streamed requires --sharding fsdp")
+        return REPLICATED
     if sharding == "fsdp":
-        return ShardingPolicy.fsdp_within_pod(dp_names[0])
+        return ShardingPolicy.fsdp_within_pod(dp_names[0], streamed=streamed)
     raise ValueError(f"unknown sharding {sharding!r}; options: "
-                     f"replicated | fsdp | ShardingPolicy(...)")
+                     f"replicated | fsdp | fsdp_streamed | "
+                     f"ShardingPolicy(...)")
 
 
 class Trainer:
     def __init__(self, cfg, mesh, *, averager="wagma", group_size=None,
                  tau=10, optimizer="sgd", learning_rate=0.1, momentum=0.9,
                  seq_len=512, global_batch=None, seed=0, microbatch=None,
-                 imbalanced=False, topology=None, sharding=None):
+                 imbalanced=False, topology=None, sharding=None,
+                 streamed=False):
         self.cfg = cfg
         self.mesh = mesh
         self.model = build_model(cfg)
         dp = dp_axes_of(mesh)
         self.n_dp = int(np.prod([mesh.shape[a] for a in dp]))
         names, sizes = dp_axis_layout(mesh.axis_names, dict(mesh.shape), dp)
-        self.sharding = resolve_sharding(sharding, names)
+        self.sharding = resolve_sharding(sharding, names, streamed=streamed)
         kw = {}
         if averager == "wagma":
             kw = {"group_size": group_size, "tau": tau}
@@ -97,8 +109,8 @@ class Trainer:
 
     def plan(self):
         """The compiled AveragingPlan the train step executes."""
-        from repro.train.train_step import _model_shapes
-        return self.averager.plan_for(_model_shapes(self.model))
+        from repro.train.train_step import _plan_of
+        return _plan_of(self.model, self.averager)
 
     def _step_fn(self, t: int):
         sync = self.averager.sync_due(t)
@@ -173,6 +185,12 @@ def main():
                     help="fsdp: shard params/opt over the intra-pod dp "
                          "axis; replicas inside a pod act as one logical "
                          "WAGMA worker (DESIGN.md §10)")
+    ap.add_argument("--streamed", action="store_true",
+                    help="with --sharding fsdp: layer-streamed execution — "
+                         "gather layer span k+1 while span k computes, "
+                         "backward re-gathers + early reduce-scatters "
+                         "(DESIGN.md §11; needs a model with a per-layer "
+                         "apply decomposition)")
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--imbalanced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
@@ -201,7 +219,8 @@ def main():
                  optimizer=args.optimizer, learning_rate=args.lr,
                  seq_len=args.seq_len, global_batch=args.global_batch,
                  microbatch=args.microbatch, imbalanced=args.imbalanced,
-                 topology=topology, sharding=args.sharding)
+                 topology=topology, sharding=args.sharding,
+                 streamed=args.streamed)
     hist = tr.run(args.steps, ckpt_dir=args.ckpt_dir,
                   ckpt_every=50 if args.ckpt_dir else 0)
     print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")

@@ -11,7 +11,7 @@ blocks so local attention costs O(S*W), not O(S^2).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +20,40 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply decomposition (layer-streamed FSDP engine, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+class LayeredModel(NamedTuple):
+    """Per-layer apply decomposition of a model.
+
+    The layer-streamed FSDP execution engine (core/streaming.py) consumes
+    parameters one **span** (scan unit — a superblock for the dense
+    family) at a time, so the model must expose its forward as
+    stem -> span* -> head over a *layered* param tree
+
+        {"stem": {...}, "layers": (span_0, ..., span_{n-1}), "head": {...}}
+
+    produced by ``split`` (pure slicing of the canonical stacked tree;
+    ``merge`` is its exact inverse).  ``stem(stem_tree, batch) ->
+    (carry, aux)`` — ``carry`` is the differentiable activation threaded
+    through the spans, ``aux`` is non-differentiable side data (positions);
+    ``span(k, span_tree, carry, aux) -> carry`` applies span k;
+    ``head_loss(head_tree, stem_tree, carry, aux, batch) ->
+    (loss, metrics)`` mirrors the registry loss bit-for-bit (the stem tree
+    is passed through for tied unembeddings).  The composition
+    ``head_loss(..., span(n-1, ..., span(0, ..., stem(...))))`` must equal
+    ``ModelAPI.loss`` exactly — the streamed/gather-all differential tests
+    pin it.
+    """
+    n_spans: int
+    split: Callable                 # params -> layered tree
+    merge: Callable                 # layered tree -> params (exact inverse)
+    stem: Callable                  # (stem_tree, batch) -> (carry, aux)
+    span: Callable                  # (k, span_tree, carry, aux, remat=True) -> carry
+    head_loss: Callable             # (head, stem, carry, aux, batch) -> (loss, metrics)
 
 
 def wsc(x, *spec):

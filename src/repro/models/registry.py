@@ -28,6 +28,77 @@ class ModelAPI(NamedTuple):
     init_caches: Callable           # (batch, max_len) -> caches
     prefill: Callable               # (params, batch, max_len) -> (logits, caches)
     decode_step: Callable           # (params, caches, token, pos) -> (logits, caches)
+    # per-layer apply decomposition for the layer-streamed FSDP engine
+    # (DESIGN.md §11); None for families without one (the streamed train
+    # step requires it and raises otherwise)
+    layered: Optional[cm.LayeredModel] = None
+
+
+def _chunked_ce(cfg, unembed_params, hidden, labels, mask):
+    """Big-vocab memory saver: the (B,S,V) fp32 logits of a 262k vocab
+    dominate the training live-set (~13 GiB/device on gemma3-12b), so
+    the CE runs over rematerialised sequence chunks — the full logits
+    tensor never exists.  ``unembed_params`` is any tree ``tfm.unembed``
+    reads (the full params, or the stem/head slices of a layered tree)."""
+    import jax
+    B, S = labels.shape
+    chunks = 8
+    while S % chunks:
+        chunks -= 1
+    Sc = S // chunks
+    xs = hidden.reshape(B, chunks, Sc, -1).swapaxes(0, 1)   # (c,B,Sc,D)
+    ls = labels.reshape(B, chunks, Sc).swapaxes(0, 1)
+    ms = (mask.reshape(B, chunks, Sc).swapaxes(0, 1) if mask is not None
+          else jnp.ones((chunks, B, Sc), jnp.float32))
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = tfm.unembed(cfg, unembed_params, xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - lab) * mc
+        tot, cnt = carry
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.remat(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _dense_layered(cfg, use_chunked_ce: bool) -> cm.LayeredModel:
+    """Layered decomposition of the dense family (one span = superblock).
+
+    ``head_loss`` mirrors ``build_model``'s dense loss branch bit-for-bit:
+    final norm, (chunked) unembed + CE, ``{"ce", "loss"}`` metrics — the
+    streamed engine's composition must be indistinguishable from
+    ``ModelAPI.loss`` (dense has no aux losses).
+    """
+    n_sb, _, _ = tfm.superblock_layout(cfg)
+
+    def stem(stem_tree, batch):
+        return tfm.stem_apply(cfg, stem_tree, batch["tokens"])
+
+    def span(k, span_tree, x, positions, remat=True):
+        return tfm.span_apply(cfg, span_tree, x, positions, remat=remat)
+
+    def head_loss(head_tree, stem_tree, x, positions, batch):
+        x = tfm.norm_apply(cfg, x, head_tree["ln_f"])
+        up = tfm.head_params_for_unembed(stem_tree, head_tree)
+        if use_chunked_ce:
+            ce = _chunked_ce(cfg, up, x, batch["labels"], batch.get("mask"))
+        else:
+            logits = tfm.unembed(cfg, up, x)
+            ce = cm.softmax_cross_entropy(logits, batch["labels"],
+                                          batch.get("mask"))
+        return ce, {"ce": ce, "loss": ce}
+
+    return cm.LayeredModel(
+        n_spans=n_sb,
+        split=lambda params: tfm.split_layered(cfg, params),
+        merge=lambda layered: tfm.merge_layered(cfg, layered),
+        stem=stem, span=span, head_loss=head_loss)
 
 
 def _dense_fwd(mod):
@@ -100,37 +171,6 @@ def build_model(cfg) -> ModelAPI:
     else:
         raise ValueError(f"unknown family {fam!r}")
 
-    def chunked_ce(params, hidden, labels, mask):
-        """Big-vocab memory saver: the (B,S,V) fp32 logits of a 262k vocab
-        dominate the training live-set (~13 GiB/device on gemma3-12b), so
-        the CE runs over rematerialised sequence chunks — the full logits
-        tensor never exists."""
-        import jax
-        B, S = labels.shape
-        chunks = 8
-        while S % chunks:
-            chunks -= 1
-        Sc = S // chunks
-        xs = hidden.reshape(B, chunks, Sc, -1).swapaxes(0, 1)   # (c,B,Sc,D)
-        ls = labels.reshape(B, chunks, Sc).swapaxes(0, 1)
-        ms = (mask.reshape(B, chunks, Sc).swapaxes(0, 1) if mask is not None
-              else jnp.ones((chunks, B, Sc), jnp.float32))
-
-        def body(carry, inp):
-            xc, lc, mc = inp
-            logits = tfm.unembed(cfg, params, xc).astype(jnp.float32)
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            lab = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
-            nll = (lse - lab) * mc
-            tot, cnt = carry
-            return (tot + nll.sum(), cnt + mc.sum()), None
-
-        (tot, cnt), _ = jax.lax.scan(
-            jax.remat(body),
-            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
-            (xs, ls, ms))
-        return tot / jnp.maximum(cnt, 1.0)
-
     # big-vocab families where forward can hand back hidden states
     chunked_families = {"dense", "moe", "hybrid", "vlm"}
     use_chunked_ce = fam in chunked_families and cfg.vocab_padded >= 65536
@@ -154,8 +194,8 @@ def build_model(cfg) -> ModelAPI:
                 aux = {}
             if text_slice:
                 hidden = hidden[:, text_slice:]
-            ce = chunked_ce(params, hidden, batch["labels"],
-                            batch.get("mask"))
+            ce = _chunked_ce(cfg, params, hidden, batch["labels"],
+                             batch.get("mask"))
         else:
             logits, aux = fwd(cfg, params, batch, remat=remat)
             if text_slice:
@@ -182,4 +222,5 @@ def build_model(cfg) -> ModelAPI:
         prefill=(lambda params, batch, max_len, remat=True:
                  pf(cfg, params, batch, max_len, remat)) if pf else None,
         decode_step=lambda params, c, tok, pos: dec(cfg, params, c, tok, pos),
+        layered=_dense_layered(cfg, use_chunked_ce) if fam == "dense" else None,
     )

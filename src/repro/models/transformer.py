@@ -214,6 +214,72 @@ def forward(cfg, params, tokens, prefix_embeds=None, remat: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Layered decomposition (layer-streamed FSDP execution, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def split_layered(cfg, params):
+    """Full param tree -> ``{"stem", "layers", "head"}`` (pure slicing).
+
+    One span per superblock — the same unit ``forward``'s scan consumes —
+    so ``span_apply(k, ...)`` composed over k reproduces the scan exactly.
+    Exact inverse of :func:`merge_layered`.
+    """
+    n_sb, _, _ = superblock_layout(cfg)
+    spans = tuple(jax.tree.map(lambda a: a[k], params["blocks"])
+                  for k in range(n_sb))
+    head = {"ln_f": params["ln_f"]}
+    if "lm_head" in params:
+        head["lm_head"] = params["lm_head"]
+    return {"stem": {"emb": params["emb"]}, "layers": spans, "head": head}
+
+
+def merge_layered(cfg, layered):
+    """``{"stem", "layers", "head"}`` -> the canonical stacked param tree."""
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *layered["layers"])
+    params = {"emb": layered["stem"]["emb"], "blocks": blocks,
+              "ln_f": layered["head"]["ln_f"]}
+    if "lm_head" in layered["head"]:
+        params["lm_head"] = layered["head"]["lm_head"]
+    return params
+
+
+def stem_apply(cfg, stem, tokens, prefix_embeds=None):
+    """Embedding stem: tokens -> (x, positions) — ``forward``'s prologue."""
+    x = embed(cfg, {"emb": stem["emb"]}, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions
+
+
+def span_apply(cfg, span_params, x, positions, remat: bool = True):
+    """Apply ONE superblock — the body ``forward``'s scan runs per slice.
+
+    The streamed engine threads the train step's ``remat`` flag through to
+    its backward per-span VJPs: remat does not change values, but it DOES
+    change which fused reductions XLA emits for the parameter gradients
+    (probed: ~1e-6 drift on qk-norm/w* grads remat vs not), so streamed
+    bwd must remat exactly when the gather-all reference path
+    (``model.loss(remat=True)``'s scan body) does to stay bit-identical.
+    """
+    n_sb, n_local, has_global = superblock_layout(cfg)
+    body = functools.partial(_superblock, cfg, n_local=n_local,
+                             has_global=has_global)
+    if remat:
+        body = jax.remat(body, static_argnums=())
+    return body(span_params, x, positions)
+
+
+def head_params_for_unembed(stem, head):
+    """Pseudo param tree :func:`unembed` reads (tied or explicit lm_head)."""
+    up = {"emb": stem["emb"]}
+    if "lm_head" in head:
+        up["lm_head"] = head["lm_head"]
+    return up
+
+
+# ---------------------------------------------------------------------------
 # Serving: prefill + single-token decode with KV caches
 # ---------------------------------------------------------------------------
 

@@ -36,9 +36,18 @@ averager step/phase bookkeeping — whose layout the averager's
 * ``fsdp_within_pod(shard_axis)`` — replicas inside a pod share weights and
   shard them over the intra-pod (ICI) axis: the state holds
   (P_pods, bucket) flat shard buckets, the step all-gathers params per
-  bucket on ICI for fwd/bwd, reduce-scatters the pod-mean gradient back,
-  updates only the owned shard, and the averager butterflies pod-to-pod on
-  the slices directly.  Per-device param+opt memory ÷ pod size.
+  bucket on ICI for fwd/bwd (inside the microbatch body, so the gathered
+  tree is a per-microbatch transient and the fp32 grad accumulator is
+  shard-sized), reduce-scatters the pod-mean gradient back, updates only
+  the owned shard, and the averager butterflies pod-to-pod on the slices
+  directly.  Per-device param+opt memory ÷ pod size.
+* ``fsdp_within_pod(shard_axis, streamed=True)`` — same sharding, but the
+  buckets are laid out layer-aware over the model's layered tree and the
+  step runs the **layer-streamed engine** (core/streaming.py, DESIGN.md
+  §11): span k+1's gather is in flight while span k computes, the
+  backward re-gathers spans and reduce-scatters each span's grads as its
+  VJP completes — peak gathered memory ~2 layer spans, bit-identical to
+  the gather-all step.
 
 **Compiled-phase-variant dispatch.** XLA collectives need static
 permutations, so the group pattern of iteration t is static per compiled
@@ -118,6 +127,32 @@ def _model_shapes(model):
     return jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
 
+@functools.lru_cache(maxsize=32)
+def _layered_shapes(model):
+    """Abstract *layered* param tree ``{"stem", "layers", "head"}``.
+
+    The tree the streamed-policy plan compiles over (its layer-aware shard
+    layout needs per-leaf layer ids — DESIGN.md §11).
+    """
+    if model.layered is None:
+        raise ValueError(
+            f"--sharding fsdp --streamed needs a per-layer apply "
+            f"decomposition, but the {model.cfg.family!r} family does not "
+            "expose one (models/registry.ModelAPI.layered)")
+    return jax.eval_shape(model.layered.split, _model_shapes(model))
+
+
+def _plan_of(model, averager):
+    """The averager's compiled plan for this model's state tree.
+
+    Streamed FSDP plans compile over the layered tree (layer-aware shard
+    layout); everything else over the canonical full tree.
+    """
+    if averager.sharding.is_sharded and averager.sharding.streamed:
+        return averager.plan_for(_layered_shapes(model))
+    return averager.plan_for(_model_shapes(model))
+
+
 def _eff_dim0_spec(mesh, averager):
     """Dim-0 spec for (P_eff, ...) stacked FSDP state arrays.
 
@@ -145,7 +180,7 @@ def replica_state_specs(model, optimizer, averager, mesh):
         return ReplicaState(lead, lead, P(), P())
     eff0 = _eff_dim0_spec(mesh, averager)
     buf = P(eff0, averager.sharding.shard_axis)
-    plan = averager.plan_for(_model_shapes(model))
+    plan = _plan_of(model, averager)
     opt_shapes = jax.eval_shape(optimizer.init, plan.shard_struct())
     opt_specs = map_opt_state(opt_shapes, lambda _: buf, lambda _: P(eff0))
     return ReplicaState(buf, opt_specs, P(), P())
@@ -186,7 +221,7 @@ def init_replica_state(model, optimizer, averager, mesh, key,
         opt_state = jax.jit(lambda p: jax.vmap(optimizer.init)(p))(params)
         return ReplicaState.create(params, opt_state)
 
-    plan = averager.plan_for(_model_shapes(model))
+    plan = _plan_of(model, averager)
     specs = replica_state_specs(model, optimizer, averager, mesh)
     n_eff = plan.P_eff
     lay = plan.shard_layout
@@ -196,7 +231,10 @@ def init_replica_state(model, optimizer, averager, mesh, key,
             jax.ShapeDtypeStruct((n_eff, size), dt, sharding=buf_sharding)
             for size, dt in zip(lay.bucket_sizes, lay.bucket_dtypes))
     else:
-        packed = bucketing.pack(model.init(key), lay)
+        init_tree = model.init(key)
+        if averager.sharding.streamed:
+            init_tree = model.layered.split(init_tree)
+        packed = bucketing.pack(init_tree, lay)
         bufs = tuple(
             jax.device_put(jnp.broadcast_to(b[None], (n_eff,) + b.shape),
                            buf_sharding)
@@ -222,54 +260,114 @@ def build_train_step(model, optimizer, averager, mesh, *, phase: int,
                      sync: bool, microbatch: Optional[int] = None,
                      remat: bool = True):
     """Returns jitted step(state: ReplicaState, batch) -> (state, metrics)."""
+    from repro.core import streaming
+
     dp = dp_axes_of(mesh)
     dp_spec = _dp_spec(mesh)
     sharded = averager.sharding.is_sharded
-    plan = averager.plan_for(_model_shapes(model)) if sharded else None
+    streamed = sharded and averager.sharding.streamed
+    plan = _plan_of(model, averager) if sharded else None
+    layered = model.layered if streamed else None
+
+    def _accumulate_microbatches(one, batch, g0):
+        """Scan ``one(mb) -> (grads, metrics, loss)`` over microbatches.
+
+        Shared by all three grad paths: fp32 accumulation into ``g0``
+        (zeros shaped like the grads — a full-tree pytree for replicated,
+        the shard-slice tuple for fsdp), mean loss metrics.  ``one`` runs
+        entirely inside the scan body, so any gather it performs is a
+        body-local transient, never pinned across the scan.
+        """
+        b_local = jax.tree.leaves(batch)[0].shape[0]
+        if b_local % microbatch or b_local < microbatch:
+            raise ValueError(
+                f"microbatch={microbatch} must divide the per-replica "
+                f"batch {b_local}")
+        mbs = jax.tree.map(
+            lambda a: a.reshape((microbatch, a.shape[0] // microbatch)
+                                + a.shape[1:]), batch)
+
+        def acc_body(carry, mb):
+            g_acc, l_acc = carry
+            g, metrics, loss = one(mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        (grads, _), metrics_all = jax.lax.scan(
+            acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / microbatch, grads)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        return grads, metrics
+
+    def _shard_g0():
+        return tuple(jnp.zeros(s.shape, jnp.float32)
+                     for s in plan.shard_struct())
 
     def grads_and_metrics(params, batch):
         def loss_fn(p, mb):
             loss, metrics = model.loss(p, mb, remat=remat)
             return loss, metrics
 
+        def one(mb):
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            return g, metrics, loss
+
         if microbatch and microbatch > 1:
-            b_local = jax.tree.leaves(batch)[0].shape[0]
-            if b_local % microbatch or b_local < microbatch:
-                raise ValueError(
-                    f"microbatch={microbatch} must divide the per-replica "
-                    f"batch {b_local}")
-
-            def split(a):
-                return a.reshape((microbatch, a.shape[0] // microbatch)
-                                 + a.shape[1:])
-            mbs = jax.tree.map(split, batch)
-
-            def acc_body(carry, mb):
-                g_acc, l_acc = carry
-                (loss, metrics), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, mb)
-                g_acc = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return (g_acc, l_acc + loss), metrics
-
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                               params)
-            (grads, _), metrics_all = jax.lax.scan(
-                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
-            grads = jax.tree.map(lambda g: g / microbatch, grads)
-            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
-        else:
-            (_, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch)
+            return _accumulate_microbatches(one, batch, g0)
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def sharded_grads_and_metrics(shards, batch):
+        """Gather-all FSDP grads -> fp32 pod-mean shard slices.
+
+        The gather and the reduce-scatter both live INSIDE the microbatch
+        body: the gathered tree is a body-local transient (freed after each
+        microbatch's bwd, never pinned across the scan) and the fp32
+        accumulator is shard-sized, not full-tree-sized.
+        """
+        def loss_fn(p, mb):
+            return model.loss(p, mb, remat=remat)
+
+        def one(mb):
+            full = plan.unshard_tree(shards)
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(full, mb)
+            return plan.grad_shards(g), metrics, loss
+
+        if microbatch and microbatch > 1:
+            return _accumulate_microbatches(one, batch, _shard_g0())
+        grads, metrics, _ = one(batch)
+        return grads, metrics
+
+    def streamed_grads_and_metrics(shards, batch):
+        """Layer-streamed FSDP grads (core/streaming.py, DESIGN.md §11).
+
+        Gather span k+1 while span k computes; backward re-gathers spans
+        (span-level remat) and reduce-scatters each span's pod-mean fp32
+        gradient the moment its VJP completes.  Bit-identical to
+        ``sharded_grads_and_metrics`` — same per-span primal/VJP ops, same
+        fp32 pack -> psum_scatter -> 1/pod scaling.
+        """
+        def one(mb):
+            loss, metrics, gs = streaming.streamed_loss_and_grad_shards(
+                plan, layered, shards, mb, remat=remat)
+            return gs, metrics, loss
+
+        if microbatch and microbatch > 1:
+            return _accumulate_microbatches(one, batch, _shard_g0())
+        grads, metrics, _ = one(batch)
         return grads, metrics
 
     def replica_fn(params, opt_state, batch):
-        if sharded:
-            # fwd/bwd on the gathered tree (per-bucket all-gather on ICI),
-            # then reduce-scatter the pod-mean gradient back to shards
-            grads, metrics = grads_and_metrics(
-                plan.unshard_tree(params), batch)
-            grads = plan.grad_shards(grads)
+        if streamed:
+            grads, metrics = streamed_grads_and_metrics(params, batch)
+        elif sharded:
+            grads, metrics = sharded_grads_and_metrics(params, batch)
         else:
             grads, metrics = grads_and_metrics(params, batch)
 
