@@ -279,6 +279,22 @@ def modeled_streamed_fsdp(*, P_cluster: int = 64, n_pods: int = 4,
     }
 
 
+def modeled_elastic_churn(*, P_cluster: int = 64, steps: int = 3000,
+                          tau: int = 10, seed: int = 0) -> dict:
+    """Elastic membership vs checkpoint-restart under preemption churn.
+
+    Delegates to ``cluster_sim.churn_scenario`` (DESIGN.md §12): one
+    Poisson preemption trace drives both recovery policies; elastic pays
+    an in-place plan recompile + host-side state handoff per world
+    change, restart pays the full job restart plus recomputation since
+    the last periodic checkpoint.  ``--check`` gates (a) the elastic
+    overhead fraction staying bounded and (b) elastic goodput beating
+    restart goodput.
+    """
+    from cluster_sim import churn_scenario
+    return churn_scenario(P_cluster, steps=steps, tau=tau, seed=seed)
+
+
 def live_mesh_bench(args) -> dict:
     """Wall-clock + launch-count measurement on the 8-device CPU mesh."""
     n_dp, S = 8, args.S
@@ -350,7 +366,8 @@ def main():
     report = {"modeled_transformer_wmt": modeled_transformer_wmt(),
               "modeled_hierarchical_wmt": modeled_hierarchical_wmt(),
               "modeled_fsdp_wmt": modeled_fsdp_wmt(),
-              "modeled_streamed_fsdp": modeled_streamed_fsdp()}
+              "modeled_streamed_fsdp": modeled_streamed_fsdp(),
+              "modeled_elastic_churn": modeled_elastic_churn()}
     m = report["modeled_transformer_wmt"]
     print(f"[model] transformer_wmt @ P={m['P']} S={m['S']}: "
           f"serial {m['serial']['modeled_step_s'] * 1e3:.3f} ms/step "
@@ -388,6 +405,14 @@ def main():
           f"{st['streamed_step_s'] * 1e3:.3f} ms (streamed, "
           f"{st['streamed_win']:.3f}x)")
 
+    el = report["modeled_elastic_churn"]
+    print(f"[model] elastic churn @ P={el['P']} over {el['steps']} steps: "
+          f"{el['n_preemptions']} preemptions -> {el['n_shrinks']} shrinks "
+          f"+ {el['n_regrows']} regrows; overhead elastic "
+          f"{el['elastic_overhead_frac']:.1%} vs restart "
+          f"{el['restart_overhead_frac']:.1%}, goodput "
+          f"{el['goodput_speedup']:.2f}x")
+
     if not args.check:
         report["live_8dev_cpu"] = live_mesh_bench(args)
 
@@ -412,6 +437,12 @@ def main():
     ok_stream = (st["peak_gathered_bytes_streamed"]
                  < st["peak_gathered_bytes_full"]
                  and st["streamed_step_s"] <= st["gather_all_step_s"])
+    # elastic gate: churn recovery must stay a bounded tax (recompile +
+    # handoff under 10% of wall clock) and strictly beat the
+    # checkpoint-restart baseline on goodput
+    ok_elastic = (el["elastic_overhead_frac"] < 0.10
+                  and el["goodput_speedup"] > 1.0
+                  and el["n_world_changes"] >= 2)
     if args.check:
         print("CHECK", "PASS" if ok else "FAIL",
               f"(overlapped {m['overlapped']['modeled_step_s']:.6e} "
@@ -428,7 +459,12 @@ def main():
               f"full {st['peak_gathered_bytes_full']:.3e}, streamed "
               f"{st['streamed_step_s']:.6e} <= gather-all "
               f"{st['gather_all_step_s']:.6e})")
-        return 0 if (ok and ok_hier and ok_fsdp and ok_stream) else 1
+        print("CHECK-ELASTIC", "PASS" if ok_elastic else "FAIL",
+              f"(overhead {el['elastic_overhead_frac']:.3f} < 0.10, "
+              f"goodput {el['goodput_speedup']:.2f}x > 1, "
+              f"{el['n_world_changes']} world changes)")
+        return 0 if (ok and ok_hier and ok_fsdp and ok_stream
+                     and ok_elastic) else 1
     return 0
 
 

@@ -40,6 +40,7 @@ from repro.core.group_allreduce import (alpha_beta_time,
                                         DEFAULT_GAMMA)
 from repro.core import bucketing, grouping
 from repro.core import plan as plan_mod
+from repro.core.elastic import largest_pow2
 
 LINK_BW = 1.0 / DEFAULT_BETA   # bytes/s per node (Piz Daint-scale Aries)
 LATENCY = DEFAULT_ALPHA        # per collective launch
@@ -273,3 +274,166 @@ def overlap_win(P: int = 64, *, model_bytes: float = 50e6, S=None,
     return {"serial_comm_s": serial, "overlapped_comm_s": overlapped,
             "combine_hidden_s": serial - overlapped,
             "speedup": serial / overlapped}
+
+
+# ---------------------------------------------------------------------------
+# Elastic churn (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def churn_scenario(P: int = 64, *, model_bytes: float = 245e6,
+                   workload: str = "wmt", steps: int = 3000, tau: int = 10,
+                   S=None, mean_uptime_steps: float = 20000.0,
+                   rejoin_delay_steps: float = 25.0, seed: int = 0,
+                   recompile_s: float = 8.0, host_bw: float = 10e9,
+                   restart_s: float = 120.0,
+                   checkpoint_period_steps: int = 100) -> dict:
+    """Preemption churn: elastic membership vs checkpoint-restart.
+
+    A Poisson preemption process (each healthy worker fails with
+    probability ``1/mean_uptime_steps`` per step, preempted workers
+    return after an exponential ``rejoin_delay_steps``) drives ONE shared
+    healthy-count trajectory, quantised to the butterfly's power-of-two
+    world; both recovery policies replay it:
+
+    * **elastic** (this repo's §12 protocol): a leave shrinks the world
+      in place — pay one plan recompile plus the host-side state handoff
+      (3x model bytes through host memory: params + two moment trees);
+      rejoins regrow at the next tau-sync barrier, where the joiner
+      clones the consensus over the wire.  No work is lost.
+    * **restart** (the classical baseline): every world change is a full
+      job restart — scheduler + init + compile ``restart_s``, plus
+      recomputing the steps since the last periodic checkpoint.
+
+    Goodput is worker-steps per wall-clock second (data-parallel sample
+    throughput).  The CI gate bounds the elastic overhead fraction and
+    requires elastic goodput to beat restart goodput.
+    """
+    rng = np.random.default_rng(seed)
+    S = S or grouping.default_group_size(P)
+    comp = compute_time_samples(rng, P, steps, workload)
+    handoff_s = 3.0 * model_bytes / host_bw + model_bytes / LINK_BW
+    _comm_cache: dict = {}
+
+    def comm(w, kind):
+        if (w, kind) not in _comm_cache:
+            algo = "wagma" if kind == "group" else "allreduce"
+            _comm_cache[(w, kind)] = comm_time(
+                model_bytes, w, max(2, min(S, w)), algo, n_buckets=4)
+        return _comm_cache[(w, kind)]
+
+    # -- one shared world trajectory: healthy count -> pow2 active world --
+    h = P
+    returns: list = []
+    active = largest_pow2(P)
+    worlds = np.zeros(steps, np.int64)
+    changes = []                       # (t, kind) world-change events
+    n_preemptions = 0
+    for t in range(steps):
+        back = [r for r in returns if r <= t]
+        returns = [r for r in returns if r > t]
+        h += len(back)
+        k = int(rng.binomial(h, 1.0 / mean_uptime_steps))
+        if k:
+            n_preemptions += k
+            h = max(h - k, 2)          # the scheduler floor (min_world)
+            returns.extend(t + 1 + rng.exponential(rejoin_delay_steps)
+                           for _ in range(k))
+        if largest_pow2(h) < active:
+            active = max(2, largest_pow2(h))
+            changes.append((t, "shrink"))
+        elif (t + 1) % tau == 0 and largest_pow2(h) > active:
+            # joins wait for the tau-sync barrier (zero-staleness adopt)
+            active = largest_pow2(h)
+            changes.append((t, "regrow"))
+        worlds[t] = active
+
+    def step_seconds(t, w):
+        if (t + 1) % tau == 0:
+            return comp[t, :w].max() + comm(w, "global")
+        return comp[t, :w].mean() + comm(w, "group")
+
+    base = np.array([step_seconds(t, int(worlds[t])) for t in range(steps)])
+    work = float(worlds.sum())         # worker-steps of useful gradient work
+    change_steps = {t: kind for t, kind in changes}
+
+    # -- elastic: in-place recompile + handoff per change, no lost work --
+    el_overhead = len(changes) * (recompile_s + handoff_s)
+    el_wall = float(base.sum()) + el_overhead
+
+    # -- restart: full restart + recompute since the last checkpoint --
+    rs_wall = 0.0
+    rs_overhead = 0.0
+    for t in range(steps):
+        if t in change_steps:
+            lost = (t % checkpoint_period_steps) * float(base[:t].mean()
+                                                         if t else 0.0)
+            rs_overhead += restart_s + lost
+        rs_wall += base[t]
+    rs_wall += rs_overhead
+
+    ideal_wall = float(np.array([step_seconds(t, P)
+                                 for t in range(steps)]).sum())
+    return {
+        "P": P, "steps": steps, "tau": tau,
+        "n_preemptions": n_preemptions,
+        "n_world_changes": len(changes),
+        "n_shrinks": sum(1 for _, k in changes if k == "shrink"),
+        "n_regrows": sum(1 for _, k in changes if k == "regrow"),
+        "min_world": int(worlds.min()), "mean_world": float(worlds.mean()),
+        "recompile_s": recompile_s, "handoff_s": handoff_s,
+        "elastic_overhead_s": el_overhead,
+        "elastic_overhead_frac": el_overhead / el_wall,
+        "restart_overhead_s": rs_overhead,
+        "restart_overhead_frac": rs_overhead / rs_wall,
+        "elastic_goodput": work / el_wall,
+        "restart_goodput": work / rs_wall,
+        "ideal_goodput": steps * P / ideal_wall,
+        "goodput_speedup": (work / el_wall) / (work / rs_wall),
+    }
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--churn", action="store_true",
+                    help="run the elastic-vs-restart churn gate")
+    ap.add_argument("--P", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="simulated steps (default: 100 for the algo "
+                    "table, 3000 for --churn)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-overhead-frac", type=float, default=0.10,
+                    help="gate: elastic overhead fraction bound")
+    args = ap.parse_args(argv)
+
+    if not args.churn:
+        for algo in ("allreduce", "dpsgd", "adpsgd", "eager", "wagma"):
+            r = simulate(algo, args.P, model_bytes=50e6, workload="wmt",
+                         steps=args.steps or 100, seed=args.seed,
+                         n_buckets=4)
+            print(f"{algo:>10s}  {r.steps_per_hour:9.1f} steps/h  "
+                  f"wait {r.mean_wait_frac:5.1%}")
+        return 0
+
+    rep = churn_scenario(args.P, steps=args.steps or 3000, seed=args.seed)
+    print(f"churn: {rep['n_preemptions']} preemptions -> "
+          f"{rep['n_shrinks']} shrinks + {rep['n_regrows']} regrows, "
+          f"world {rep['min_world']}..{rep['P']} "
+          f"(mean {rep['mean_world']:.1f})")
+    print(f"elastic: overhead {rep['elastic_overhead_s']:8.1f}s "
+          f"({rep['elastic_overhead_frac']:5.1%}), goodput "
+          f"{rep['elastic_goodput']:.1f} worker-steps/s")
+    print(f"restart: overhead {rep['restart_overhead_s']:8.1f}s "
+          f"({rep['restart_overhead_frac']:5.1%}), goodput "
+          f"{rep['restart_goodput']:.1f} worker-steps/s")
+    ok_bounded = rep["elastic_overhead_frac"] < args.max_overhead_frac
+    ok_beats = rep["goodput_speedup"] > 1.0
+    print(f"CHECK-CHURN {'PASS' if ok_bounded and ok_beats else 'FAIL'}: "
+          f"overhead {rep['elastic_overhead_frac']:.1%} "
+          f"{'<' if ok_bounded else '>='} {args.max_overhead_frac:.0%}, "
+          f"elastic/restart goodput {rep['goodput_speedup']:.2f}x")
+    return 0 if (ok_bounded and ok_beats) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

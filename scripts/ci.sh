@@ -65,6 +65,22 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
   --smoke --sharding fsdp --streamed --hierarchical --mesh-shape 2,4,1 \
   --out experiments/dryrun-ci
 
+# Elastic kill/rejoin smoke (DESIGN.md §12): scripted preemption on the
+# 8-device host mesh — a worker leaves mid-training, the dp mesh shrinks
+# and the averaging plan recompiles in place (no restart), the worker
+# rejoins at the tau-sync barrier, and the run exits non-zero unless the
+# rejoiner's replica row is bit-identical to the survivors' at the first
+# post-rejoin tau-sync (and the dead topology's plan-cache entries were
+# evicted).  Same code path as tests/test_elastic.py's subprocess test.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+  python -m repro.launch.elastic
+
+# Elastic churn gate (DESIGN.md §12): discrete-event preemption trace,
+# elastic recovery (in-place recompile + host-side handoff) vs the
+# checkpoint-restart baseline — exits non-zero if the elastic overhead
+# fraction is unbounded (>=10% of wall clock) or restart wins on goodput.
+PYTHONPATH=src python benchmarks/cluster_sim.py --churn
+
 # Link-constant calibration scaffold smoke (ROADMAP: measured
 # alpha/beta/gamma): microbench ppermute/all-gather per mesh axis on the
 # 8-device CPU mesh and round-trip the JSON through

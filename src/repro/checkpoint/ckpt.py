@@ -153,13 +153,11 @@ def load_replica_state(path: str, template, *, sharding=None, plan=None,
         # both fsdp but different bucket layouts (layer-streamed vs
         # gather-all): one plan cannot describe both, and the npz keys are
         # flat bucket indices, so a direct template load would silently
-        # mix layouts
-        raise ValueError(
-            f"checkpoint at {path} was written under {src.describe()} but "
-            f"the run uses {sharding.describe()}; convert through a "
-            "replicated checkpoint (restore replicated with the source "
-            "layout's plan — plus layered= for a streamed source — save, "
-            "then restore that with this run's plan)")
+        # mix layouts — route through the canonical-replicated conversion
+        # path instead (load in the source layout, convert to replicated,
+        # convert back under this run's plan; bit-exact, DESIGN.md §11)
+        return _load_across_stream_layouts(path, template, src, sharding,
+                                           plan, layered)
     needs_layered = (src.kind != sharding.kind
                      and (src.streamed or sharding.streamed))
     if needs_layered and layered is None:
@@ -201,4 +199,58 @@ def load_replica_state(path: str, template, *, sharding=None, plan=None,
         return state
     if sharding.streamed:
         state = replica_mod.split_layered_state(state, layered)
+    return replica_mod.replicated_to_fsdp_state(state, plan)
+
+
+def _load_across_stream_layouts(path, template, src, sharding, plan,
+                                layered):
+    """streamed <-> gather-all fsdp restore via the canonical replicated path.
+
+    ``plan`` is the RESTORING run's plan.  The source layout's plan is
+    compiled here on the same topology/config with the flipped streamed
+    bit; the state loads in the source layout, converts host-side to the
+    replicated layout, crosses the layered <-> canonical tree structures
+    when the two plans were compiled over different trees (``layered``
+    required for that — the real-model case, where gather-all plans hold
+    the canonical tree and streamed plans the layered one; pass
+    ``layered=None`` when both plans share one tree structure), and
+    converts back under the destination plan.  Pure restructuring +
+    pod-mean of identical broadcast members — bit-exact.
+    """
+    from repro.core import replica as replica_mod
+    from repro.core.plan import compile_plan
+
+    if plan is None:
+        raise ValueError(
+            f"checkpoint at {path} was written under {src.describe()} but "
+            f"the run uses {sharding.describe()}; pass the compiled plan "
+            "to convert across the bucket layouts")
+    src_policy = replica_mod.ShardingPolicy.fsdp_within_pod(
+        src.shard_axis or sharding.shard_axis, streamed=src.streamed)
+    if layered is None:
+        # both plans over one tree structure (e.g. gather-all compiled
+        # directly over a layered tree); compile_plan validates it fits
+        src_tree = plan.storage_struct
+    elif src.streamed:
+        # destination gather-all holds the canonical tree; the source
+        # stored the layered tree
+        src_tree = jax.eval_shape(layered.split, plan.storage_struct)
+    else:
+        # destination streamed holds the layered tree; the source stored
+        # the canonical tree
+        src_tree = jax.eval_shape(layered.merge, plan.storage_struct)
+    src_plan = compile_plan(plan.topology, src_tree, plan.cfg, src_policy)
+    src_template = replica_mod.sharded_state_template(src_plan,
+                                                      template.opt_state)
+    params, opt, step = load_checkpoint(path, src_template.params,
+                                        src_template.opt_state)
+    with open(os.path.join(path, "manifest.json")) as f:
+        phase = json.load(f)["metadata"].get("phase", -1)
+    state = replica_mod.ReplicaState.create(params, opt, step=step,
+                                            phase=phase)
+    state = replica_mod.fsdp_to_replicated_state(state, src_plan)
+    if layered is not None:
+        state = replica_mod.merge_layered_state(state, layered) \
+            if src.streamed else \
+            replica_mod.split_layered_state(state, layered)
     return replica_mod.replicated_to_fsdp_state(state, plan)

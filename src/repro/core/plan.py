@@ -1203,10 +1203,37 @@ _SHARD_STRUCT_CACHE: Dict[tuple, AveragingPlan] = {}
 
 
 def clear_plan_cache() -> None:
-    """Drop compiled plans (and the treedefs they retain) — test hygiene."""
+    """Drop every compile-time cache this subsystem owns.
+
+    The single delegating entry point: compiled plans (and the treedefs
+    they retain), the shard-struct index, the per-class budget sweep, AND
+    ``bucketing``'s layout cache + budget sweep — a long-lived process
+    that recompiles after a topology change must be able to release all
+    of it with one call (previously only the autouse test fixture
+    cleared the layout cache, so production churn leaked layouts).
+    """
     _PLAN_CACHE.clear()
     _SHARD_STRUCT_CACHE.clear()
     choose_class_bucket_bytes.cache_clear()
+    bucketing.clear_layout_cache()
+
+
+def evict_topology(topology: Topology) -> int:
+    """Drop cached plans compiled for one topology; returns entries removed.
+
+    Membership changes (core/elastic.py) retire topologies for good — the
+    old world size never comes back under the same object — so the
+    controller evicts their plans instead of nuking every cache the way
+    :func:`clear_plan_cache` does.  Cache keys lead with the topology, so
+    eviction is a key-prefix filter.
+    """
+    removed = 0
+    for cache in (_PLAN_CACHE, _SHARD_STRUCT_CACHE):
+        dead = [k for k in cache if k[0] == topology]
+        for k in dead:
+            del cache[k]
+        removed += len(dead)
+    return removed
 
 
 def _structure_key(tree) -> tuple:

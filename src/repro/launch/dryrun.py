@@ -1,14 +1,11 @@
-import os
-# setdefault so a caller (e.g. the CI fsdp smoke) can force a smaller
-# host-device count; the full sweep still defaults to the 512-chip view.
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
-
 """Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh).
 
-The two lines above MUST run before any other import (jax locks the device
-count at first init); smoke tests and benches never import this module, so
-they see the real single CPU device.
+The forced host-device count is set by ``main()`` (CLI entry) BEFORE the
+first jax backend init — jax locks the device count there, not at import
+— via ``os.environ.setdefault`` so a caller (e.g. the CI fsdp smoke) can
+force a smaller count.  Importing this module has NO side effects: tools
+that import it for :func:`resolve_config` / :func:`lower_pair` keep their
+own device view (tests/test_launch_import.py pins this).
 
 For each pair this lowers the appropriate step:
     train_4k              -> WAGMA train_step (group-averaging variant)
@@ -35,10 +32,24 @@ skipped for whisper (enc-dec 448-position decoder semantics).
 
 import argparse
 import json
+import os
 import time
 import traceback
 
 import jax
+
+
+def _force_host_device_count(n: int = 512) -> None:
+    """Pin the forced host-device count for the dry-run sweep.
+
+    Must run before the first jax backend init (the first ``jax.devices``
+    /first compilation — importing jax does not init).  ``setdefault`` so
+    an explicit caller-supplied XLA_FLAGS (the CI smokes) wins.  Called
+    from ``main()`` only: merely importing this module must never pin the
+    device count of the embedding process.
+    """
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
 
 from repro.configs import SHAPES, arch_names, get_config
 from repro.launch import mesh as mesh_lib
@@ -394,6 +405,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, averager: str = "wagma",
 
 
 def main():
+    _force_host_device_count()          # before any jax device/compile use
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])

@@ -1,0 +1,289 @@
+"""Elastic membership driver: survive pod churn without a restart.
+
+DESIGN.md §12.  Composes the host-side membership machinery
+(core/elastic.py) with the production Trainer:
+
+* a **leave** (preemption, dead host) shrinks the dp mesh immediately —
+  the survivors' replica rows are re-seated host-side
+  (checkpoint-free), a mesh over just the surviving devices is built,
+  and the averaging plan recompiles for the new topology (the plan
+  cache keys on topology; the dead topology's entries are evicted);
+* a **join** waits for the next tau-sync barrier: right after the sync
+  collective every survivor holds the identical consensus model, so the
+  joiner clones it bit-exactly with zero staleness (Parallel Restarted
+  SGD's restart discipline — the same barrier that bounds simulator
+  buffer age by ``max_staleness_bound(tau)``);
+* every world change is **epoch-stamped** and logged with the topology
+  diff and the number of evicted plan-cache entries.
+
+The power-of-two butterfly invariant is kept by quantising the healthy
+set (surplus workers wait as spares and rejoin at the barrier too).
+
+:func:`kill_rejoin_demo` scripts the whole protocol on the forced-host
+CPU mesh — it is both the CI smoke (``python -m repro.launch.elastic``)
+and the body of the kill/rejoin subprocess test, so the gate and the
+test exercise one code path.
+
+Scope: the elastic driver runs the replicated policy (every worker is
+one dp replica).  Sharded (FSDP-within-pod) worlds hand off through the
+same :func:`~repro.core.elastic.handoff_state` conversion machinery at
+pod granularity — pinned host-side in tests/test_elastic.py — but wiring
+pod-granular membership into the driver is future work.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import compat
+from repro.core import plan as plan_mod
+from repro.core.elastic import (MembershipController, diff_topology,
+                                largest_pow2, select_replica_rows)
+from repro.launch.mesh import mesh_over
+from repro.launch.train import Trainer
+
+
+def _rows_identical(params) -> bool:
+    """True iff every stacked leaf's replica rows are bitwise identical."""
+    for leaf in jax.tree.leaves(params):
+        a = np.asarray(leaf)
+        if a.shape[0] > 1 and not (a == a[:1]).all():
+            return False
+    return True
+
+
+class ElasticTrainer:
+    """Drive WAGMA training across membership changes, restart-free.
+
+    ``devices`` is the physical pool; controller worker ``w`` maps to
+    ``devices[w]``.  The active world always forms a ``(n_dp, 1)``
+    ``("data", "model")`` mesh over its devices.  ``group_size`` is
+    clamped to the current world (a shrink below S would otherwise make
+    the butterfly impossible).
+    """
+
+    def __init__(self, cfg, devices=None, *, tau: int = 4, group_size=None,
+                 min_world: int = 2, seed: int = 0, **trainer_kw):
+        if trainer_kw.get("sharding") not in (None, "replicated"):
+            raise NotImplementedError(
+                "ElasticTrainer drives the replicated policy; sharded "
+                "worlds convert through core.elastic.handoff_state at pod "
+                "granularity (see module docstring)")
+        if trainer_kw.pop("averager", "wagma") != "wagma":
+            raise NotImplementedError("elastic membership needs the "
+                                      "tau-sync barrier (wagma averager)")
+        self.cfg = cfg
+        self.devices = list(devices if devices is not None
+                            else jax.devices())
+        self.tau = int(tau)
+        self.group_size = group_size
+        self.seed = seed
+        self.trainer_kw = trainer_kw
+        self.controller = MembershipController(range(len(self.devices)),
+                                               min_world=min_world)
+        self.epoch_log: list = []
+        self.trainer: Trainer = None
+        self._build(None)
+
+    # -- world (re)construction ------------------------------------------
+
+    def _S(self, world_size: int):
+        if self.group_size is None:
+            return None
+        return max(2, min(int(self.group_size), world_size))
+
+    def _build(self, init_state) -> None:
+        world = self.controller.membership.active
+        mesh = mesh_over([self.devices[w] for w in world],
+                         (len(world), 1), ("data", "model"))
+        self.trainer = Trainer(self.cfg, mesh, averager="wagma",
+                               group_size=self._S(len(world)), tau=self.tau,
+                               seed=self.seed, init_state=init_state,
+                               **self.trainer_kw)
+
+    def _transition(self, ev, rows) -> None:
+        """Re-seat state on the new world and recompile the plan."""
+        old_topo = self.trainer.averager.topology
+        host = jax.device_get(self.trainer.state)
+        consensus = _rows_identical(host.params)
+        if ev.kind == "regrow" and not consensus:
+            raise AssertionError(
+                "regrow outside the tau-sync barrier: survivor rows are "
+                "not the post-sync consensus")
+        self._build(select_replica_rows(host, rows))
+        diff = diff_topology(old_topo, self.trainer.averager.topology)
+        evicted = plan_mod.evict_topology(old_topo)
+        self.epoch_log.append({
+            "epoch": ev.epoch, "kind": ev.kind, "world": list(ev.world),
+            "topology_diff": diff.describe(), "plans_evicted": evicted,
+            "consensus_at_transition": consensus,
+        })
+
+    # -- membership events -----------------------------------------------
+
+    def leave(self, worker: int):
+        """Worker died; shrink the world now (it blocks every collective)."""
+        ev = self.controller.leave(worker)
+        if ev.kind == "shrink":
+            self._transition(ev, rows=list(ev.keep_rows))
+        return ev
+
+    def join(self, worker: int):
+        """Announce a (re)joining worker; promoted at the next tau-sync."""
+        return self.controller.join(worker)
+
+    def _maybe_regrow(self):
+        """The tau-sync barrier: promote spares/joiners onto the consensus."""
+        ev = self.controller.at_sync_barrier()
+        if ev.kind == "regrow":
+            n_old = len(ev.world) - ev.n_joined
+            # joiners clone row 0 — the post-sync consensus replica
+            self._transition(ev, rows=list(range(n_old)) + [0] * ev.n_joined)
+        return ev
+
+    # -- driving ---------------------------------------------------------
+
+    @property
+    def world_size(self) -> int:
+        return self.controller.membership.world_size
+
+    def run(self, steps: int, events=None, log_every: int = 0):
+        """Train ``steps`` global steps, applying scheduled churn.
+
+        ``events`` maps global step t -> iterable of ``("leave", w)`` /
+        ``("join", w)`` applied *before* step t runs.  Returns one record
+        per step: ``{"t", "loss", "world", "epoch"}``.
+        """
+        events = events or {}
+        records = []
+        for t in range(steps):
+            for kind, w in events.get(t, ()):
+                if kind == "leave":
+                    self.leave(w)
+                elif kind == "join":
+                    self.join(w)
+                else:
+                    raise ValueError(f"unknown event {kind!r}")
+            sync = self.trainer.averager.sync_due(t)
+            with compat.set_mesh(self.trainer.mesh):
+                loss = self.trainer.step_once(t)
+            records.append({"t": t, "loss": loss,
+                            "world": self.world_size,
+                            "epoch": self.controller.epoch})
+            if log_every and (t % log_every == 0 or t == steps - 1):
+                print(f"step {t:4d} loss {loss:.4f} world "
+                      f"{self.world_size} epoch {self.controller.epoch}"
+                      + (" [sync]" if sync else ""), flush=True)
+            if sync:
+                self._maybe_regrow()
+        return records
+
+
+def kill_rejoin_demo(*, arch: str = "qwen3-0.6b", steps: int = 8,
+                     tau: int = 4, group_size: int = 2, world: int = 4,
+                     leave_step: int = 2, leave_worker: int = 2,
+                     learning_rate: float = 0.05, seed: int = 0,
+                     log_every: int = 1) -> dict:
+    """Scripted kill/rejoin scenario on the CPU mesh; asserts the protocol.
+
+    Timeline (defaults, tau=4): steps 0..1 on the full world; at t=2
+    worker ``leave_worker`` is killed and immediately announces its
+    rejoin -> the world shrinks to ``largest_pow2(world-1)`` (one healthy
+    survivor is demoted to spare) and training continues; the t=3
+    tau-sync is the rejoin barrier -> the spare and the returned worker
+    adopt the post-sync consensus and the world regrows; the final step
+    (``steps-1``, a tau-sync) pins the acceptance criterion: every
+    replica row — the rejoiner's included — is **bit-identical** to the
+    survivors'.
+
+    Raises AssertionError on any protocol violation; returns the report
+    dict otherwise.  Needs >= ``world`` visible devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    from repro.configs import get_config
+
+    assert steps % tau == 0, "the last step must be a tau-sync"
+    assert leave_step < steps and leave_step % tau != tau - 1
+    devices = jax.devices()
+    if len(devices) < world:
+        raise RuntimeError(
+            f"need {world} devices, have {len(devices)}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={world}")
+
+    cfg = get_config(arch, smoke=True)
+    et = ElasticTrainer(cfg, devices[:world], tau=tau,
+                        group_size=group_size, seed=seed,
+                        learning_rate=learning_rate)
+    events = {leave_step: [("leave", leave_worker),
+                           ("join", leave_worker)]}
+    records = et.run(steps, events=events, log_every=log_every)
+
+    losses = [r["loss"] for r in records]
+    assert len(records) == steps and np.isfinite(losses).all(), \
+        "training did not continue across the membership changes"
+    shrunk = max(2, largest_pow2(world - 1))
+    mid = [r["world"] for r in records
+           if leave_step <= r["t"] < ((leave_step // tau) + 1) * tau]
+    assert mid and all(w == shrunk for w in mid), \
+        f"expected the shrunken world {shrunk} between leave and barrier, " \
+        f"got {mid}"
+    m = et.controller.membership
+    assert m.world_size == world and not m.spares and not m.pending, \
+        f"world did not regrow: {m}"
+    assert m.epoch == 2, f"expected epochs shrink+regrow, got {m.epoch}"
+    kinds = [e["kind"] for e in et.epoch_log]
+    assert kinds == ["shrink", "regrow"], kinds
+    assert all(e["plans_evicted"] >= 1 for e in et.epoch_log), \
+        "dropped topologies left plan-cache entries behind"
+    assert et.epoch_log[1]["consensus_at_transition"], \
+        "rejoin barrier was not a consensus point"
+
+    # THE acceptance criterion: at the first post-rejoin tau-sync (the
+    # final step), the rejoined worker's replica row is bit-identical to
+    # every survivor's
+    host = jax.device_get(et.trainer.state)
+    bit_identical = _rows_identical(host.params)
+    assert bit_identical, \
+        "post-rejoin tau-sync left replica rows divergent"
+
+    return {"arch": cfg.name, "steps": steps, "tau": tau, "world": world,
+            "leave_step": leave_step, "leave_worker": leave_worker,
+            "history": records, "epoch_log": et.epoch_log,
+            "rejoin_bit_identical": bool(bit_identical),
+            "final_loss": losses[-1]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="elastic kill/rejoin smoke on the forced-host CPU mesh")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=2)
+    ap.add_argument("--world", type=int, default=4)
+    ap.add_argument("--leave-step", type=int, default=2)
+    ap.add_argument("--leave-worker", type=int, default=2)
+    args = ap.parse_args()
+    try:
+        rep = kill_rejoin_demo(arch=args.arch, steps=args.steps,
+                               tau=args.tau, group_size=args.group_size,
+                               world=args.world, leave_step=args.leave_step,
+                               leave_worker=args.leave_worker)
+    except (AssertionError, RuntimeError) as e:
+        print(f"ELASTIC-DEMO FAIL {e}")
+        return 1
+    for e in rep["epoch_log"]:
+        print(f"epoch {e['epoch']} {e['kind']:6s} world {e['world']} "
+              f"({e['topology_diff']}; {e['plans_evicted']} plans evicted)")
+    print(f"ELASTIC-DEMO PASS world {rep['world']} -> "
+          f"{min(r['world'] for r in rep['history'])} -> {rep['world']}, "
+          f"rejoiner bit-identical at the post-rejoin tau-sync, final "
+          f"loss {rep['final_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,6 +20,24 @@ def make_host_mesh(data: int = 4, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def mesh_over(devices, shape, axes):
+    """Mesh over an explicit device subset (elastic worlds, DESIGN.md §12).
+
+    ``jax.make_mesh`` always takes every visible device; an elastic
+    shrink needs a mesh over just the surviving workers' devices, and a
+    regrow one over survivors + joiners in membership rank order.
+    """
+    import numpy as np
+    devices = list(devices)
+    n = 1
+    for s in shape:
+        n *= int(s)
+    if n != len(devices):
+        raise ValueError(f"mesh shape {tuple(shape)} needs {n} devices, "
+                         f"got {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), tuple(axes))
+
+
 # TPU v5e hardware constants for the roofline terms
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -65,7 +65,7 @@ class Trainer:
                  tau=10, optimizer="sgd", learning_rate=0.1, momentum=0.9,
                  seq_len=512, global_batch=None, seed=0, microbatch=None,
                  imbalanced=False, topology=None, sharding=None,
-                 streamed=False):
+                 streamed=False, init_state=None):
         self.cfg = cfg
         self.mesh = mesh
         self.model = build_model(cfg)
@@ -95,13 +95,38 @@ class Trainer:
                                       imbalanced=imbalanced)
         self.microbatch = microbatch
         self._steps = {}
-        with compat.set_mesh(mesh):
-            self.state = init_replica_state(self.model, self.opt,
-                                            self.averager, mesh,
-                                            jax.random.PRNGKey(seed))
         dp_spec = dp if len(dp) > 1 else dp[0]
+        self._dp_spec = dp_spec
+        with compat.set_mesh(mesh):
+            if init_state is not None:
+                # elastic handoff / warm start: seat a host-side
+                # ReplicaState (already in this policy's layout, with the
+                # right replica-row count for this mesh) instead of
+                # initialising fresh weights
+                self.state = self._put_state(init_state)
+            else:
+                self.state = init_replica_state(self.model, self.opt,
+                                                self.averager, mesh,
+                                                jax.random.PRNGKey(seed))
         self._batch_sharding = lambda v: NamedSharding(
             mesh, P(dp_spec, *([None] * (v.ndim - 1))))
+
+    def _put_state(self, state):
+        """device_put a host ReplicaState with this run's shardings."""
+        from repro.core.replica import ReplicaState, map_opt_state
+        from repro.train import replica_state_specs
+        specs = replica_state_specs(self.model, self.opt, self.averager,
+                                    self.mesh)
+        scalar = NamedSharding(self.mesh, P())
+        put = lambda spec: (lambda t: jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a),
+                                     NamedSharding(self.mesh, spec)), t))
+        # the per-replica count vector shards over dim 0 only
+        opt = map_opt_state(state.opt_state, put(specs.params),
+                            put(P(specs.params[0])))
+        return ReplicaState(put(specs.params)(state.params), opt,
+                            jax.device_put(jnp.asarray(state.step), scalar),
+                            jax.device_put(jnp.asarray(state.phase), scalar))
 
     @property
     def params(self):
@@ -128,16 +153,26 @@ class Trainer:
         return {k: jax.device_put(jnp.asarray(v), self._batch_sharding(
             jnp.asarray(v))) for k, v in nb.items()}
 
+    def step_once(self, t: int) -> float:
+        """Run global step ``t`` (data, variant dispatch, update); returns loss.
+
+        ``t`` is the *global* step index — the butterfly phase and the
+        tau-sync schedule key off it, so an elastic driver that rebuilds
+        the Trainer mid-run keeps passing its own monotonic counter.
+        Callers outside :meth:`run` wrap in ``compat.set_mesh(self.mesh)``.
+        """
+        batch = self._put_batch(t)
+        step = self._step_fn(t)
+        self.state, metrics = step(self.state, batch)
+        return float(metrics["loss"])
+
     def run(self, steps: int, log_every: int = 10, ckpt_dir=None,
             ckpt_every=0):
         history = []
         with compat.set_mesh(self.mesh):
             t0 = time.time()
             for t in range(steps):
-                batch = self._put_batch(t)
-                step = self._step_fn(t)
-                self.state, metrics = step(self.state, batch)
-                loss = float(metrics["loss"])
+                loss = self.step_once(t)
                 history.append(loss)
                 if log_every and (t % log_every == 0 or t == steps - 1):
                     dt = time.time() - t0

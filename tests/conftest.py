@@ -15,14 +15,16 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 @pytest.fixture(autouse=True)
 def _clear_bucket_layout_cache():
-    """Keep ``bucketing._LAYOUT_CACHE`` from leaking across tests.
+    """Keep compile-time caches from leaking across tests.
 
-    Layouts are keyed on tree structure and retain PyTreeDefs, so
+    Layouts/plans are keyed on tree structure and retain PyTreeDefs, so
     parametrised mesh/model sweeps would otherwise accumulate entries for
     the whole session; clearing per test also keeps cache-hit assertions
     (tests/test_bucketing.py) independent of test order.
+    ``plan.clear_plan_cache()`` is the single delegating entry point — it
+    clears the plan/shard-struct caches, both budget sweeps, and
+    ``bucketing``'s layout cache.
     """
     yield
-    from repro.core import bucketing, plan
-    bucketing.clear_layout_cache()
+    from repro.core import plan
     plan.clear_plan_cache()

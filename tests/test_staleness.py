@@ -112,6 +112,54 @@ def test_staleness_bounded_by_tau(seed, n_straggle, p_stall):
     assert max_age <= staleness.max_staleness_bound(tau)
 
 
+def test_straggler_model_no_stragglers_edge():
+    """n_stragglers=0 must degenerate to the fully-synchronous schedule."""
+    model = staleness.StragglerModel(8, n_stragglers=0, p_stall=1.0, seed=4)
+    for _ in range(5):
+        ready, completes = model.sample()
+        assert np.asarray(ready).all() and np.asarray(completes).all()
+
+
+def test_straggler_model_p_stall_one_edge():
+    """p_stall=1.0: every drawn straggler also fails to complete."""
+    model = staleness.StragglerModel(8, n_stragglers=3, p_stall=1.0, seed=5)
+    for _ in range(10):
+        ready, completes = model.sample()
+        r, c = np.asarray(ready), np.asarray(completes)
+        assert (~r).sum() == 3
+        np.testing.assert_array_equal(r, c), \
+            "a stalled straggler must not count as completing"
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), tau=st.integers(2, 7),
+       p_ready=st.floats(0.0, 1.0), p_complete=st.floats(0.0, 1.0))
+def test_age_bounded_under_arbitrary_schedules(seed, tau, p_ready,
+                                               p_complete):
+    """The tau bound must hold for ANY ready/completes schedule, not just
+    StragglerModel's (which draws a fixed straggler count per step): age
+    resets at every sync and never exceeds max_staleness_bound(tau) in
+    between, even when whole iterations have nobody ready."""
+    P, S = 8, 4
+    rng = np.random.default_rng(seed)
+    st_ = _state(P, dim=3, seed=seed)
+
+    def upd(W):
+        return jax.tree.map(lambda a: a + 0.1, W)
+
+    for t in range(3 * tau):
+        ready = rng.random(P) < p_ready
+        completes = np.logical_or(ready, rng.random(P) < p_complete)
+        st_ = staleness.wagma_sim_step(st_, upd, P=P, S=S, tau=tau,
+                                       ready=jnp.asarray(ready),
+                                       completes=jnp.asarray(completes), t=t)
+        ages = np.asarray(st_.age)
+        assert ages.max() <= staleness.max_staleness_bound(tau), \
+            (t, ages.tolist())
+        if (t + 1) % tau == 0:
+            assert ages.max() == 0, "sync must reset all staleness"
+
+
 def test_mean_preserved_without_stragglers():
     P, S = 16, 4
     st_ = _state(P, dim=5, seed=3)

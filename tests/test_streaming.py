@@ -383,15 +383,42 @@ def test_streamed_checkpoint_cross_policy_restore(tmp_path):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
 
-    # streamed <-> gather-all layout mismatch must fail loudly, not mix
-    tpl_all = replica.sharded_state_template(
-        compile_plan(topo, pods[0], cfg,
-                     ShardingPolicy.fsdp_within_pod("data")),
-        st_fsdp.opt_state)
-    with pytest.raises(ValueError, match="replicated checkpoint"):
+    # streamed <-> gather-all restore auto-routes through the canonical
+    # replicated conversion path (it used to fail loudly); here BOTH
+    # plans compile over the same layered tree, so no layered= needed.
+    # The destination plan must be supplied though — npz keys are flat
+    # bucket indices, so mixing layouts without it would be silent
+    # corruption.
+    plan_all = compile_plan(topo, pods[0], cfg,
+                            ShardingPolicy.fsdp_within_pod("data"))
+    tpl_all = replica.sharded_state_template(plan_all, st_fsdp.opt_state)
+    with pytest.raises(ValueError, match="pass the compiled plan"):
         load_replica_state(d, tpl_all,
-                           sharding=ShardingPolicy.fsdp_within_pod("data"),
-                           plan=plan)
+                           sharding=ShardingPolicy.fsdp_within_pod("data"))
+    st_all = load_replica_state(d, tpl_all,
+                                sharding=ShardingPolicy.fsdp_within_pod(
+                                    "data"),
+                                plan=plan_all)
+    assert int(st_all.step) == 5 and int(st_all.phase) == 1
+    # bit-exact across the layout change: unpack both and compare leaves
+    got_tree = replica._unpack_rows(st_all.params, plan_all.shard_layout)
+    want_tree = replica._unpack_rows(st_fsdp.params, plan.shard_layout)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(got_tree)[0],
+            jax.tree_util.tree_flatten_with_path(want_tree)[0]):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=str(path))
+
+    # and back: a gather-all checkpoint restores into the streamed layout
+    d3 = str(tmp_path / "ck3")
+    save_replica_state(d3, st_all,
+                       sharding=ShardingPolicy.fsdp_within_pod("data"))
+    st_round = load_replica_state(d3, replica.sharded_state_template(
+        plan, st_fsdp.opt_state), sharding=STREAM, plan=plan)
+    for a, b in zip(st_round.params, st_fsdp.params):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
 
 
 def _leaf_by_path(tree, path):
