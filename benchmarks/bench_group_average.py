@@ -295,6 +295,23 @@ def modeled_elastic_churn(*, P_cluster: int = 64, steps: int = 3000,
     return churn_scenario(P_cluster, steps=steps, tau=tau, seed=seed)
 
 
+def modeled_degraded_mode(*, P_cluster: int = 64, steps: int = 600,
+                          tau: int = 10, seed: int = 0) -> dict:
+    """Degraded-mode rounds vs wait-for-all under the §V-B 320 ms trace.
+
+    Delegates to ``cluster_sim.degraded_mode_scenario`` (DESIGN.md §13):
+    the same seeded `FaultSchedule` the chaos tests replay delays two
+    workers per step by 320 ms; wait-for-all eats the full delay every
+    round, degraded mode waits only the collective deadline and charges
+    the late partner one round of staleness, repaid at the tau-sync.
+    ``--check`` (CHECK-CHAOS) gates degraded goodput beating wait-for-all
+    with the staleness bound intact.
+    """
+    from cluster_sim import degraded_mode_scenario
+    return degraded_mode_scenario(P_cluster, steps=steps, tau=tau,
+                                  seed=seed)
+
+
 def live_mesh_bench(args) -> dict:
     """Wall-clock + launch-count measurement on the 8-device CPU mesh."""
     n_dp, S = 8, args.S
@@ -367,7 +384,8 @@ def main():
               "modeled_hierarchical_wmt": modeled_hierarchical_wmt(),
               "modeled_fsdp_wmt": modeled_fsdp_wmt(),
               "modeled_streamed_fsdp": modeled_streamed_fsdp(),
-              "modeled_elastic_churn": modeled_elastic_churn()}
+              "modeled_elastic_churn": modeled_elastic_churn(),
+              "modeled_degraded_mode": modeled_degraded_mode()}
     m = report["modeled_transformer_wmt"]
     print(f"[model] transformer_wmt @ P={m['P']} S={m['S']}: "
           f"serial {m['serial']['modeled_step_s'] * 1e3:.3f} ms/step "
@@ -413,6 +431,16 @@ def main():
           f"{el['restart_overhead_frac']:.1%}, goodput "
           f"{el['goodput_speedup']:.2f}x")
 
+    dg = report["modeled_degraded_mode"]
+    print(f"[model] degraded mode @ P={dg['P']} (§V-B trace "
+          f"{dg['schedule_fingerprint']}): wait-for-all "
+          f"{dg['waitall_step_s'] * 1e3:.1f} ms/step vs degraded "
+          f"{dg['degraded_step_s'] * 1e3:.1f} ms/step "
+          f"({dg['goodput_speedup']:.2f}x), "
+          f"{dg['skipped_contributions']} skipped contributions, peak "
+          f"staleness {dg['peak_staleness_age']} <= "
+          f"{dg['staleness_bound']}")
+
     if not args.check:
         report["live_8dev_cpu"] = live_mesh_bench(args)
 
@@ -443,6 +471,12 @@ def main():
     ok_elastic = (el["elastic_overhead_frac"] < 0.10
                   and el["goodput_speedup"] > 1.0
                   and el["n_world_changes"] >= 2)
+    # chaos gate: under the paper's §V-B straggler trace, degraded-mode
+    # rounds (deadline-bounded waits, staleness charged and repaid at the
+    # tau-sync) must beat the wait-for-all baseline without ever
+    # exceeding max_staleness_bound(tau)
+    ok_chaos = (dg["goodput_speedup"] > 1.0 and dg["staleness_bounded"]
+                and dg["skipped_contributions"] > 0)
     if args.check:
         print("CHECK", "PASS" if ok else "FAIL",
               f"(overlapped {m['overlapped']['modeled_step_s']:.6e} "
@@ -463,8 +497,13 @@ def main():
               f"(overhead {el['elastic_overhead_frac']:.3f} < 0.10, "
               f"goodput {el['goodput_speedup']:.2f}x > 1, "
               f"{el['n_world_changes']} world changes)")
+        print("CHECK-CHAOS", "PASS" if ok_chaos else "FAIL",
+              f"(degraded/wait-for-all goodput "
+              f"{dg['goodput_speedup']:.2f}x > 1, peak staleness "
+              f"{dg['peak_staleness_age']} <= {dg['staleness_bound']}, "
+              f"{dg['skipped_contributions']} skipped)")
         return 0 if (ok and ok_hier and ok_fsdp and ok_stream
-                     and ok_elastic) else 1
+                     and ok_elastic and ok_chaos) else 1
     return 0
 
 

@@ -41,6 +41,8 @@ from repro.core.group_allreduce import (alpha_beta_time,
 from repro.core import bucketing, grouping
 from repro.core import plan as plan_mod
 from repro.core.elastic import largest_pow2
+from repro.core.faults import FaultSchedule
+from repro.core.staleness import max_staleness_bound
 
 LINK_BW = 1.0 / DEFAULT_BETA   # bytes/s per node (Piz Daint-scale Aries)
 LATENCY = DEFAULT_ALPHA        # per collective launch
@@ -392,11 +394,95 @@ def churn_scenario(P: int = 64, *, model_bytes: float = 245e6,
     }
 
 
+def degraded_mode_scenario(P: int = 64, *, model_bytes: float = 245e6,
+                           steps: int = 600, tau: int = 10, S=None,
+                           seed: int = 0, straggler_ms: float = 320.0,
+                           n_stragglers: int = 2,
+                           collective_deadline_s: float = 0.05,
+                           base_compute_s: float = 0.30,
+                           jitter_s: float = 0.01) -> dict:
+    """Degraded-mode rounds vs wait-for-all under the §V-B straggler trace.
+
+    The same seeded `core.faults.FaultSchedule` the chaos tests replay —
+    every step, ``n_stragglers`` workers finish ``straggler_ms`` late —
+    is played against two synchronisation rules:
+
+    * **wait-for-all** (synchronous allreduce): every step waits for the
+      slowest worker, so each round eats the full 320 ms.
+    * **degraded mode** (this PR's §13 execution rule): a group round
+      waits at most the collective deadline for a late partner, then
+      proceeds with the survivors — the straggler's contribution goes
+      stale and is charged one round of staleness, repaid at the
+      tau-sync barrier (which, per the paper, still waits for everyone).
+
+    Staleness stays within ``max_staleness_bound(tau)`` by construction
+    (the barrier resets every age); the CHECK-CHAOS gate requires the
+    degraded-mode goodput to beat wait-for-all.
+    """
+    rng = np.random.default_rng(seed)
+    S = S or grouping.default_group_size(P)
+    schedule = FaultSchedule.straggler_trace(
+        P, steps, ms=straggler_ms, n_stragglers=n_stragglers, seed=seed)
+    comp = np.clip(rng.normal(base_compute_s, jitter_s, (steps, P)),
+                   0.05, None)
+    t_group = comm_time(model_bytes, P, max(2, min(S, P)), "wagma",
+                        n_buckets=4)
+    t_global = comm_time(model_bytes, P, max(2, min(S, P)), "allreduce",
+                         n_buckets=4)
+
+    ages = np.zeros(P, np.int64)
+    peak_age = 0
+    skipped = 0
+    waitall_wall = 0.0
+    degraded_wall = 0.0
+    for t in range(steps):
+        delays = schedule.delays_at(t)
+        finish = comp[t].copy()
+        for w, d in delays.items():
+            finish[w] += d
+        waitall_wall += finish.max() + t_global
+        if (t + 1) % tau == 0:
+            # the tau-sync barrier waits for everyone; all ages repay
+            degraded_wall += finish.max() + t_global
+            ages[:] = 0
+        else:
+            late = [w for w, d in delays.items()
+                    if d > collective_deadline_s]
+            on_time = np.ones(P, bool)
+            on_time[late] = False
+            wait = collective_deadline_s if late else 0.0
+            degraded_wall += comp[t][on_time].mean() + wait + t_group
+            skipped += len(late)
+            ages[on_time] = 0
+            for w in late:
+                ages[w] += 1
+                peak_age = max(peak_age, int(ages[w]))
+
+    work = float(P * steps)   # every contribution is used, some stale
+    return {
+        "P": P, "steps": steps, "tau": tau, "S": S,
+        "straggler_ms": straggler_ms, "n_stragglers": n_stragglers,
+        "collective_deadline_s": collective_deadline_s,
+        "schedule_fingerprint": schedule.fingerprint(),
+        "skipped_contributions": skipped,
+        "peak_staleness_age": peak_age,
+        "staleness_bound": max_staleness_bound(tau),
+        "staleness_bounded": peak_age <= max_staleness_bound(tau),
+        "waitall_step_s": waitall_wall / steps,
+        "degraded_step_s": degraded_wall / steps,
+        "waitall_goodput": work / waitall_wall,
+        "degraded_goodput": work / degraded_wall,
+        "goodput_speedup": waitall_wall / degraded_wall,
+    }
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--churn", action="store_true",
                     help="run the elastic-vs-restart churn gate")
+    ap.add_argument("--degraded", action="store_true",
+                    help="run the degraded-mode vs wait-for-all gate")
     ap.add_argument("--P", type=int, default=64)
     ap.add_argument("--steps", type=int, default=None,
                     help="simulated steps (default: 100 for the algo "
@@ -405,6 +491,24 @@ def main(argv=None) -> int:
     ap.add_argument("--max-overhead-frac", type=float, default=0.10,
                     help="gate: elastic overhead fraction bound")
     args = ap.parse_args(argv)
+
+    if args.degraded:
+        rep = degraded_mode_scenario(args.P, steps=args.steps or 600,
+                                     seed=args.seed)
+        print(f"degraded-mode (§V-B trace {rep['schedule_fingerprint']}): "
+              f"{rep['skipped_contributions']} skipped contributions, "
+              f"peak staleness {rep['peak_staleness_age']} <= "
+              f"{rep['staleness_bound']}")
+        print(f"wait-for-all {rep['waitall_step_s']*1e3:7.1f} ms/step "
+              f"({rep['waitall_goodput']:.1f} worker-steps/s)")
+        print(f"degraded     {rep['degraded_step_s']*1e3:7.1f} ms/step "
+              f"({rep['degraded_goodput']:.1f} worker-steps/s)")
+        ok = rep["goodput_speedup"] > 1.0 and rep["staleness_bounded"]
+        print(f"CHECK-DEGRADED {'PASS' if ok else 'FAIL'}: "
+              f"degraded/wait-for-all goodput "
+              f"{rep['goodput_speedup']:.2f}x, staleness bounded: "
+              f"{rep['staleness_bounded']}")
+        return 0 if ok else 1
 
     if not args.churn:
         for algo in ("allreduce", "dpsgd", "adpsgd", "eager", "wagma"):

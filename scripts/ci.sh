@@ -75,6 +75,17 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
 XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
   python -m repro.launch.elastic
 
+# Chaos smoke (DESIGN.md §13): detector-driven fault tolerance on the
+# 8-device host mesh — a fixed FaultSchedule (one hang that wakes, one
+# crash that rejoins) silences workers on the virtual clock; NOTHING is
+# scripted.  The heartbeat failure detector must suspect each silent
+# worker past the collective deadline, shrink the world in place, charge
+# the skipped contributions to the staleness ledger (never past
+# max_staleness_bound(tau)), and re-admit recovered workers bit-identical
+# at the tau-sync barrier — the run exits non-zero on any violation.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+  python -m repro.launch.elastic --chaos
+
 # Elastic churn gate (DESIGN.md §12): discrete-event preemption trace,
 # elastic recovery (in-place recompile + host-side handoff) vs the
 # checkpoint-restart baseline — exits non-zero if the elastic overhead

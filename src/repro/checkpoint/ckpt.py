@@ -14,17 +14,67 @@ converts across policies through the compiled plan when the restoring run
 uses the other one — save from a sharded run, restore into a replicated
 run and vice versa, with ``consolidate`` agreeing either way
 (tests/test_replica.py pins the equality).
+
+Writes are **atomic** (DESIGN.md §13): every file lands on a temp path,
+is flushed + fsynced, then rename-committed; the manifest — carrying a
+crc32 checksum per stored leaf — is written last, so a crash at any
+point mid-save (exactly what ``core.faults.InjectedCrash`` induces)
+leaves either the previous complete checkpoint or a torn write that
+:func:`load_checkpoint` rejects loudly on checksum/manifest mismatch —
+never a half-written state that loads silently.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# rename-commit seam; the crash-mid-save tests monkeypatch this to die
+# between the data files and the manifest
+_replace = os.replace
+
+
+class ChecksumError(RuntimeError):
+    """A stored leaf's bytes do not match the manifest's checksum."""
+
+
+def _checksum(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _atomic_savez(path: str, flat: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    _replace(tmp, path)
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    _replace(tmp, path)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> dict:
@@ -44,27 +94,48 @@ def _flatten(tree) -> dict:
 
 def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
                     metadata: Optional[dict] = None):
+    """Atomic save: data files first, checksummed manifest last.
+
+    The manifest rename is the commit point — a reader either sees the
+    previous complete (manifest, data) pair or the new one, and a torn
+    combination (new data + old manifest, or a crash before any rename)
+    fails the checksum verification in :func:`load_checkpoint` instead
+    of loading silently.
+    """
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
-    np.savez(os.path.join(path, "params.npz"), **flat)
-    if opt_state is not None:
-        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    _atomic_savez(os.path.join(path, "params.npz"), flat)
     manifest = {
         "step": int(step),
         "keys": sorted(flat),
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "checksums": {k: _checksum(v) for k, v in flat.items()},
         "metadata": metadata or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    if opt_state is not None:
+        opt_flat = _flatten(opt_state)
+        _atomic_savez(os.path.join(path, "opt_state.npz"), opt_flat)
+        manifest["opt_checksums"] = {k: _checksum(v)
+                                     for k, v in opt_flat.items()}
+    _atomic_write_text(os.path.join(path, "manifest.json"),
+                       json.dumps(manifest, indent=2))
+    _fsync_dir(path)
 
 
 def load_checkpoint(path: str, params_template, opt_template=None):
-    """Restore into the structure of the given templates."""
+    """Restore into the structure of the given templates.
+
+    Every leaf read is verified against the manifest's crc32 before use
+    (checkpoints predating the checksums load unverified); a mismatch —
+    a torn write, bit rot, or data files newer than the manifest —
+    raises :class:`ChecksumError` instead of returning corrupt state.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
     data = np.load(os.path.join(path, "params.npz"))
 
-    def rebuild(template, npz):
+    def rebuild(template, npz, checksums):
         flat_keys = []
 
         def visit(p, leaf):
@@ -77,14 +148,21 @@ def load_checkpoint(path: str, params_template, opt_template=None):
         for key, leaf in flat_keys:
             arr = npz[key]
             assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            if checksums is not None and key in checksums:
+                got = _checksum(arr)
+                if got != checksums[key]:
+                    raise ChecksumError(
+                        f"checkpoint {path!r} leaf {key!r}: stored bytes "
+                        f"hash {got}, manifest says {checksums[key]} — "
+                        "torn or corrupted write")
             leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
         return jax.tree.unflatten(jax.tree.structure(template), leaves)
 
-    params = rebuild(params_template, data)
-    with open(os.path.join(path, "manifest.json")) as f:
-        step = json.load(f)["step"]
+    params = rebuild(params_template, data, manifest.get("checksums"))
+    step = manifest["step"]
     if opt_template is not None:
-        opt = rebuild(opt_template, np.load(os.path.join(path, "opt_state.npz")))
+        opt = rebuild(opt_template, np.load(os.path.join(path, "opt_state.npz")),
+                      manifest.get("opt_checksums"))
         return params, opt, step
     return params, step
 

@@ -146,8 +146,10 @@ class MembershipEvent:
     """What one membership transition did.
 
     ``kind``: ``"shrink"`` (immediate, on a leave), ``"regrow"`` (at a
-    tau-sync barrier), ``"defer"`` (join queued to the next barrier) or
-    ``"noop"``.  For shrinks, ``keep_rows`` are the OLD world's row
+    tau-sync barrier), ``"defer"`` (join queued to the next barrier),
+    ``"rejected-stale-epoch"`` (a detector verdict from a retired
+    topology, refused — see :meth:`MembershipController.apply_verdict`)
+    or ``"noop"``.  For shrinks, ``keep_rows`` are the OLD world's row
     indices that survive, in NEW world rank order — exactly the argument
     :func:`handoff_state` takes.  For regrows, ``n_joined`` counts the
     appended rows.
@@ -245,6 +247,35 @@ class MembershipController:
             return MembershipEvent("noop", self.epoch, tuple(self._active))
         self._pending.append(worker)
         return MembershipEvent("defer", self.epoch, tuple(self._active))
+
+    def apply_verdict(self, verdict) -> MembershipEvent:
+        """Detection -> membership: act on a `core.health.Verdict`.
+
+        This is the autonomous twin of the scripted :meth:`leave`: a
+        SUSPECT verdict shrinks the world (a hung partner must not block
+        the butterfly), a DEAD verdict removes whatever trace of the
+        worker remains (usually a noop — the suspect shrink already ran).
+
+        A verdict stamped with a **stale epoch** is rejected outright:
+        it was raised against a topology that has since been retired
+        (its plan-cache entries evicted via ``plan.evict_topology``),
+        and its worker/row indictment means nothing in the current
+        world.  Acting on it would shrink the *current* world for a
+        failure observed in a dead one.
+        """
+        if verdict.epoch != self.epoch:
+            return MembershipEvent("rejected-stale-epoch", self.epoch,
+                                   tuple(self._active))
+        from repro.core import health as _health
+        if verdict.state == _health.RECOVERED:
+            return self.join(verdict.worker)
+        if verdict.state not in (_health.SUSPECT, _health.DEAD):
+            raise ValueError(f"unactionable verdict state {verdict.state!r}")
+        w = int(verdict.worker)
+        if w not in self._active and w not in self._spares \
+                and w not in self._pending:
+            return MembershipEvent("noop", self.epoch, tuple(self._active))
+        return self.leave(w)
 
     def at_sync_barrier(self) -> MembershipEvent:
         """Called right after a tau-sync step: promote waiting workers.

@@ -140,3 +140,62 @@ class StragglerModel:
 def max_staleness_bound(tau: int) -> int:
     """Theory Assumption 3: staleness is bounded by the sync period."""
     return tau
+
+
+class StalenessBoundExceeded(RuntimeError):
+    """A worker's skipped contributions aged past max_staleness_bound(tau).
+
+    Theory Assumption 3 no longer holds for this run — the degraded-mode
+    driver hard-aborts rather than silently averaging arbitrarily stale
+    state (DESIGN.md §13)."""
+
+
+@dataclass
+class SkipLedger:
+    """Host-side staleness accounting for skipped contributions.
+
+    The enforced twin of the simulator's per-worker buffer ``age``
+    (`wagma_sim_step`): when the degraded-mode driver runs a round
+    without a suspected partner, it charges that worker one round of
+    staleness here.  The charge raises `StalenessBoundExceeded` the
+    moment the age would pass `max_staleness_bound(tau)` — a hang the
+    detector tolerates too long must abort, not corrupt.  Rejoining at
+    a tau-sync barrier resets the age to zero (the joiner adopts the
+    post-sync consensus); a confirmed-dead worker is dropped (its state
+    will never be averaged in again, so it carries no staleness debt).
+    """
+    tau: int
+
+    def __post_init__(self):
+        self.ages: dict = {}
+        self.total_skipped: dict = {}
+        self.peak_age: int = 0
+
+    def charge(self, worker: int, step: int) -> int:
+        """One skipped group round for ``worker`` at ``step``."""
+        age = self.ages.get(worker, 0) + 1
+        self.ages[worker] = age
+        self.total_skipped[worker] = self.total_skipped.get(worker, 0) + 1
+        self.peak_age = max(self.peak_age, age)
+        if age > max_staleness_bound(self.tau):
+            raise StalenessBoundExceeded(
+                f"worker {worker} skipped {age} rounds at step {step}, "
+                f"exceeding max_staleness_bound(tau={self.tau})="
+                f"{max_staleness_bound(self.tau)}")
+        return age
+
+    def reset(self, worker: int) -> None:
+        """Worker contributed again (rejoined at a sync barrier)."""
+        self.ages.pop(worker, None)
+
+    def drop(self, worker: int) -> None:
+        """Worker confirmed dead: no future contribution to age."""
+        self.ages.pop(worker, None)
+
+    def max_age(self) -> int:
+        return max(self.ages.values(), default=0)
+
+    def snapshot(self) -> dict:
+        return {"ages": dict(self.ages),
+                "total_skipped": dict(self.total_skipped),
+                "peak_age": self.peak_age}

@@ -24,6 +24,21 @@ CPU mesh — it is both the CI smoke (``python -m repro.launch.elastic``)
 and the body of the kill/rejoin subprocess test, so the gate and the
 test exercise one code path.
 
+**Chaos mode** (DESIGN.md §13): :meth:`ElasticTrainer.run_under_faults`
+drives the same machinery *autonomously* — no scripted leaves.  A
+seeded `core.faults.FaultSchedule` silences workers on a virtual clock,
+the `core.health.FailureDetector` turns silence past the per-round
+collective deadline into suspect/confirm verdicts, a suspect downgrades
+the round to the survivors' quantised world through
+``MembershipController.apply_verdict`` (same handoff + plan eviction as
+a scripted leave), every skipped contribution is charged to a
+`core.staleness.SkipLedger` (hard abort past ``max_staleness_bound``),
+and recovered workers rejoin bit-identically at the tau-sync barrier.
+Time is virtual (``step * step_time_s``), so the same schedule replays
+bit-identically — :func:`chaos_demo` is the CI smoke
+(``python -m repro.launch.elastic --chaos``) and the chaos-matrix test
+body.
+
 Scope: the elastic driver runs the replicated policy (every worker is
 one dp replica).  Sharded (FSDP-within-pod) worlds hand off through the
 same :func:`~repro.core.elastic.handoff_state` conversion machinery at
@@ -34,14 +49,21 @@ pod-granular membership into the driver is future work.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import hashlib
 
 import jax
 import numpy as np
 
 from repro import compat
+from repro.core import faults as faults_mod
+from repro.core import health as health_mod
 from repro.core import plan as plan_mod
 from repro.core.elastic import (MembershipController, diff_topology,
                                 largest_pow2, select_replica_rows)
+from repro.core.faults import FaultSchedule
+from repro.core.health import DetectorConfig, FailureDetector
+from repro.core.staleness import SkipLedger
 from repro.launch.mesh import mesh_over
 from repro.launch.train import Trainer
 
@@ -181,6 +203,155 @@ class ElasticTrainer:
                 self._maybe_regrow()
         return records
 
+    # -- chaos mode (DESIGN.md §13) --------------------------------------
+
+    def state_digest(self) -> str:
+        """SHA-256 over every replica-state leaf's bytes — two runs with
+        bit-identical state produce equal digests."""
+        host = jax.device_get(self.trainer.state)
+        h = hashlib.sha256()
+        for leaf in jax.tree.leaves(host):
+            h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+        return h.hexdigest()
+
+    def run_under_faults(self, steps: int, schedule: FaultSchedule, *,
+                         detector: DetectorConfig = None,
+                         step_time_s: float = 0.1,
+                         collective_deadline_s: float = 0.05,
+                         log_every: int = 0) -> dict:
+        """Train under a fault schedule with detector-driven membership.
+
+        Unlike :meth:`run`, nothing here is scripted: the schedule only
+        controls *when workers fall silent* on the virtual clock
+        (``now = t * step_time_s``).  Each round, live workers heartbeat,
+        the detector is polled at the round's collective deadline
+        (``now + collective_deadline_s``), and its verdicts drive the
+        membership — suspect -> immediate shrink to the survivors'
+        quantised world, recovery -> join promoted at the tau-sync
+        barrier, confirm -> permanent death.  Every round a shrunk-away
+        worker misses is charged to the `SkipLedger`, which raises
+        `StalenessBoundExceeded` past ``max_staleness_bound(tau)``.
+
+        Because no wall time is ever read, replaying the same schedule
+        is bit-identical.  Returns ``{"records", "events", "staleness",
+        "schedule_fingerprint", "state_digest"}``; the structured event
+        log (kinds: hang/crash/delay onset, wake, recover, suspect,
+        confirm-dead, shrink, regrow, stale-verdict-rejected) also stays
+        on ``self.event_log``.
+        """
+        det = FailureDetector(range(len(self.devices)), detector,
+                              epoch=self.controller.epoch)
+        ledger = SkipLedger(tau=self.tau)
+        self.event_log: list = []
+        down = {}           # worker -> FaultEvent currently silencing it
+        busy_until = {}     # worker -> virtual time its delayed round ends
+        pending_beats = []  # (deliver_time, worker) — delayed heartbeats
+        out_since = {}      # worker -> step it was shrunk away at
+        records = []
+
+        def log(kind, worker, t, now, **extra):
+            e = {"kind": kind, "worker": worker, "step": t,
+                 "wall": round(now, 6), "epoch": self.controller.epoch}
+            e.update(extra)
+            self.event_log.append(e)
+
+        def on_beat(verdict, t, now):
+            # a recovered worker announces a (re)join; the barrier promotes
+            if verdict is None or verdict.state != health_mod.RECOVERED:
+                return
+            log("recover", verdict.worker, t, now,
+                silent_s=round(verdict.silent_s, 6))
+            if verdict.worker not in self.controller.membership.active:
+                self.join(verdict.worker)
+
+        for t in range(steps):
+            now = t * step_time_s
+            # 1. faults scheduled at t take effect before the round
+            for fev in schedule.at(t):
+                if fev.kind == faults_mod.DELAY:
+                    done = now + fev.ms / 1e3
+                    busy_until[fev.worker] = max(
+                        busy_until.get(fev.worker, 0.0), done)
+                    pending_beats.append((done, fev.worker))
+                    log("delay", fev.worker, t, now, ms=fev.ms)
+                else:  # hang / crash: silence until `until` (maybe forever)
+                    down[fev.worker] = fev
+                    log(fev.kind, fev.worker, t, now, until=fev.until)
+            # 2. hangs/crashes whose recovery step arrived wake up
+            for w, fev in list(down.items()):
+                if fev.until is not None and t >= fev.until:
+                    del down[w]
+                    log("wake", w, t, now)
+            # 3. heartbeats: matured delayed beats, then on-time beats
+            for bt, w in sorted(pending_beats):
+                if bt <= now and w not in down:
+                    on_beat(det.heartbeat(w, bt), t, now)
+            pending_beats = [(bt, w) for bt, w in pending_beats
+                             if bt > now and w not in down]
+            for w in range(len(self.devices)):
+                if w in down or busy_until.get(w, 0.0) > now:
+                    continue
+                on_beat(det.heartbeat(w, now), t, now)
+            # 4. the round's collective deadline turns silence into verdicts
+            for v in det.poll(now + collective_deadline_s):
+                if v.epoch != self.controller.epoch:
+                    # a verdict raised earlier in this same poll batch,
+                    # just before a shrink bumped the epoch: the detector
+                    # state is still current, so re-stamp rather than
+                    # reject (the stale-epoch guard is for verdicts held
+                    # across topologies, not batch-mates)
+                    v = dataclasses.replace(v, epoch=self.controller.epoch)
+                if v.state == health_mod.SUSPECT:
+                    log("suspect", v.worker, t, now,
+                        silent_s=round(v.silent_s, 6),
+                        timeout_s=round(det.suspect_timeout(v.worker), 6))
+                elif v.state == health_mod.DEAD:
+                    log("confirm-dead", v.worker, t, now,
+                        silent_s=round(v.silent_s, 6))
+                ev = self.controller.apply_verdict(v)
+                if ev.kind == "shrink":
+                    self._transition(ev, rows=list(ev.keep_rows))
+                    det.set_epoch(self.controller.epoch)
+                    out_since[v.worker] = t
+                    log("shrink", v.worker, t, now, world=list(ev.world))
+                elif ev.kind == "rejected-stale-epoch":
+                    log("stale-verdict-rejected", v.worker, t, now,
+                        verdict_epoch=v.epoch)
+                if v.state == health_mod.DEAD:
+                    # permanent: no future contribution to age
+                    ledger.drop(v.worker)
+                    out_since.pop(v.worker, None)
+            # 5. staleness: every shrunk-away survivor misses this round
+            for w in sorted(out_since):
+                ledger.charge(w, t)
+            # 6. run the round on the (possibly downgraded) world
+            sync = self.trainer.averager.sync_due(t)
+            with compat.set_mesh(self.trainer.mesh):
+                loss = self.trainer.step_once(t)
+            records.append({"t": t, "loss": loss, "world": self.world_size,
+                            "epoch": self.controller.epoch,
+                            "max_skip_age": ledger.max_age()})
+            if log_every and (t % log_every == 0 or t == steps - 1):
+                print(f"step {t:4d} loss {loss:.4f} world "
+                      f"{self.world_size} epoch {self.controller.epoch} "
+                      f"skip-age {ledger.max_age()}"
+                      + (" [sync]" if sync else ""), flush=True)
+            # 7. tau-sync barrier: promote recovered workers onto consensus
+            if sync:
+                prev = set(self.controller.membership.active)
+                ev = self._maybe_regrow()
+                if ev.kind == "regrow":
+                    det.set_epoch(self.controller.epoch)
+                    for w in ev.world:
+                        if w not in prev:
+                            ledger.reset(w)
+                            out_since.pop(w, None)
+                            log("regrow", w, t, now, world=list(ev.world))
+        return {"records": records, "events": list(self.event_log),
+                "staleness": ledger.snapshot(),
+                "schedule_fingerprint": schedule.fingerprint(),
+                "state_digest": self.state_digest()}
+
 
 def kill_rejoin_demo(*, arch: str = "qwen3-0.6b", steps: int = 8,
                      tau: int = 4, group_size: int = 2, world: int = 4,
@@ -256,6 +427,65 @@ def kill_rejoin_demo(*, arch: str = "qwen3-0.6b", steps: int = 8,
             "final_loss": losses[-1]}
 
 
+def chaos_demo(*, arch: str = "qwen3-0.6b", steps: int = 12, tau: int = 4,
+               group_size: int = 2, world: int = 8,
+               learning_rate: float = 0.05, seed: int = 0,
+               log_every: int = 1) -> dict:
+    """CI chaos smoke: one hang + one crash/rejoin on the 8-dev host mesh.
+
+    Nothing is scripted — the fixed `FaultSchedule` (a hang at t=2 that
+    wakes 3 steps later, a crash at t=8 that rejoins 3 steps later) only
+    silences workers; the failure detector does the rest.  Expected
+    timeline with the default timeouts (suspect 0.25 s, confirm 0.30 s,
+    0.1 s virtual rounds): the hung worker is suspected ~2.5 silent
+    rounds in -> world 8 -> 4 without a restart; its recovery heartbeat
+    announces a rejoin promoted at the t=7 tau-sync (8 again, skipped
+    rounds charged up to exactly ``max_staleness_bound(tau)``); the
+    crashed worker repeats the cycle through the t=11 barrier.  Asserts
+    survivor convergence, detector-driven epochs, staleness accounting,
+    and the bit-identical rejoin; raises AssertionError otherwise.
+    """
+    from repro.configs import get_config
+
+    devices = jax.devices()
+    if len(devices) < world:
+        raise RuntimeError(
+            f"need {world} devices, have {len(devices)}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={world}")
+    schedule = FaultSchedule.of(
+        faults_mod.hang(1, 2, recover_after=3),
+        faults_mod.crash(3, 8, rejoin_after=3),
+    )
+    cfg = get_config(arch, smoke=True)
+    et = ElasticTrainer(cfg, devices[:world], tau=tau,
+                        group_size=group_size, seed=seed,
+                        learning_rate=learning_rate)
+    rep = et.run_under_faults(steps, schedule, log_every=log_every)
+
+    losses = [r["loss"] for r in rep["records"]]
+    assert len(losses) == steps and np.isfinite(losses).all(), \
+        "survivor world did not keep training through the faults"
+    kinds = [e["kind"] for e in rep["events"]]
+    for needed in ("hang", "crash", "suspect", "shrink", "recover",
+                   "wake", "regrow"):
+        assert needed in kinds, f"missing {needed!r} events: {kinds}"
+    m = et.controller.membership
+    assert m.world_size == world and not m.spares and not m.pending, \
+        f"world did not regrow after the faults: {m}"
+    assert [e["kind"] for e in et.epoch_log] == \
+        ["shrink", "regrow", "shrink", "regrow"], et.epoch_log
+    stale = rep["staleness"]
+    assert stale["total_skipped"] and not stale["ages"], \
+        f"skipped contributions not visible / not settled: {stale}"
+    assert 1 <= stale["peak_age"] <= tau, stale
+    host = jax.device_get(et.trainer.state)
+    assert _rows_identical(host.params), \
+        "rejoiners not bit-identical to survivors at the tau-sync"
+    rep.update(arch=cfg.name, steps=steps, tau=tau, world=world,
+               final_loss=losses[-1], epoch_log=et.epoch_log)
+    return rep
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(
         description="elastic kill/rejoin smoke on the forced-host CPU mesh")
@@ -266,7 +496,29 @@ def main() -> int:
     ap.add_argument("--world", type=int, default=4)
     ap.add_argument("--leave-step", type=int, default=2)
     ap.add_argument("--leave-worker", type=int, default=2)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the detector-driven chaos smoke instead of "
+                         "the scripted kill/rejoin scenario")
     args = ap.parse_args()
+    if args.chaos:
+        try:
+            rep = chaos_demo(arch=args.arch, tau=args.tau,
+                             group_size=args.group_size)
+        except (AssertionError, RuntimeError) as e:
+            print(f"CHAOS-DEMO FAIL {e}")
+            return 1
+        for e in rep["events"]:
+            print(f"  t={e['step']:3d} wall={e['wall']:.2f}s epoch "
+                  f"{e['epoch']} {e['kind']:22s} worker {e['worker']}")
+        skipped = sum(rep["staleness"]["total_skipped"].values())
+        print(f"CHAOS-DEMO PASS schedule {rep['schedule_fingerprint']}: "
+              f"hang + crash/rejoin detected (no scripts), world "
+              f"{rep['world']} -> {min(r['world'] for r in rep['records'])}"
+              f" -> {rep['world']}, {skipped} skipped contributions "
+              f"(peak staleness {rep['staleness']['peak_age']} <= tau="
+              f"{rep['tau']}), rejoiners bit-identical, final loss "
+              f"{rep['final_loss']:.4f}")
+        return 0
     try:
         rep = kill_rejoin_demo(arch=args.arch, steps=args.steps,
                                tau=args.tau, group_size=args.group_size,

@@ -65,7 +65,7 @@ class Trainer:
                  tau=10, optimizer="sgd", learning_rate=0.1, momentum=0.9,
                  seq_len=512, global_batch=None, seed=0, microbatch=None,
                  imbalanced=False, topology=None, sharding=None,
-                 streamed=False, init_state=None):
+                 streamed=False, init_state=None, fault_injector=None):
         self.cfg = cfg
         self.mesh = mesh
         self.model = build_model(cfg)
@@ -110,6 +110,14 @@ class Trainer:
                                                 jax.random.PRNGKey(seed))
         self._batch_sharding = lambda v: NamedSharding(
             mesh, P(dp_spec, *([None] * (v.ndim - 1))))
+        # core.faults.FaultInjector (or None): wall-clock fault runtime
+        # for this process's worker identity, consulted before each step
+        self.fault_injector = fault_injector
+        # replica-steps whose optimiser update was skipped by the
+        # non-finite gradient guard (train/train_step.py), accumulated
+        # from the per-step `skipped_nonfinite` metric fraction
+        self.skipped_nonfinite = 0.0
+        self.last_metrics = {}
 
     def _put_state(self, state):
         """device_put a host ReplicaState with this run's shardings."""
@@ -161,9 +169,14 @@ class Trainer:
         the Trainer mid-run keeps passing its own monotonic counter.
         Callers outside :meth:`run` wrap in ``compat.set_mesh(self.mesh)``.
         """
+        if self.fault_injector is not None:
+            self.fault_injector.before_step(t)
         batch = self._put_batch(t)
         step = self._step_fn(t)
         self.state, metrics = step(self.state, batch)
+        self.last_metrics = {k: float(v) for k, v in metrics.items()}
+        self.skipped_nonfinite += \
+            self.last_metrics.get("skipped_nonfinite", 0.0) * self.n_dp
         return float(metrics["loss"])
 
     def run(self, steps: int, log_every: int = 10, ckpt_dir=None,
@@ -178,8 +191,10 @@ class Trainer:
                     dt = time.time() - t0
                     tput = self.shape.global_batch * self.shape.seq_len \
                         * (t + 1) / max(dt, 1e-9)
+                    skip = (f" skipped_nonfinite {self.skipped_nonfinite:.0f}"
+                            if self.skipped_nonfinite else "")
                     print(f"step {t:5d} loss {loss:.4f} "
-                          f"({tput:,.0f} tok/s wall)", flush=True)
+                          f"({tput:,.0f} tok/s wall){skip}", flush=True)
                 if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
                     save_replica_state(
                         ckpt_dir, jax.device_get(self.state),

@@ -1,8 +1,9 @@
 from repro.train.train_step import (batch_shardings, build_train_step,
-                                    dp_axes_of, init_replica_state,
+                                    dp_axes_of, guarded_update,
+                                    init_replica_state,
                                     replica_state_specs, stacked_init,
-                                    train_shardings)
+                                    train_shardings, tree_all_finite)
 
 __all__ = ["batch_shardings", "build_train_step", "dp_axes_of",
-           "init_replica_state", "replica_state_specs", "stacked_init",
-           "train_shardings"]
+           "guarded_update", "init_replica_state", "replica_state_specs",
+           "stacked_init", "train_shardings", "tree_all_finite"]

@@ -256,6 +256,37 @@ def init_replica_state(model, optimizer, averager, mesh, key,
     return ReplicaState.create(bufs, opt)
 
 
+def tree_all_finite(tree):
+    """Traced scalar bool: every leaf of ``tree`` is NaN/Inf-free."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.asarray(True)
+    return functools.reduce(jnp.logical_and,
+                            (jnp.isfinite(l).all() for l in leaves))
+
+
+def guarded_update(optimizer, grads, opt_state, params, *, finite=None):
+    """Optimiser update with the non-finite gradient guard (DESIGN.md §13).
+
+    When ``grads`` contain a NaN/Inf, the whole update is skipped —
+    params and optimiser state pass through **bit-exact** — so a
+    diverging or corrupted replica contributes its last good weights to
+    the group average instead of poisoning it.  When grads are finite
+    the result is bit-exact ``optimizer.update`` (``where(True, new,
+    old)``), so differential tests see no change.  Pass ``finite`` to
+    override the local check (the fsdp step pmin-reduces it over the
+    shard axis first, so every shard of a pod agrees).  Returns
+    ``(new_params, new_opt_state, skipped)``.
+    """
+    if finite is None:
+        finite = tree_all_finite(grads)
+    new_params, new_opt = optimizer.update(grads, opt_state, params)
+    keep = lambda new, old: jnp.where(finite, new, old)
+    new_params = jax.tree.map(keep, new_params, params)
+    new_opt = jax.tree.map(keep, new_opt, opt_state)
+    return new_params, new_opt, jnp.logical_not(finite)
+
+
 def build_train_step(model, optimizer, averager, mesh, *, phase: int,
                      sync: bool, microbatch: Optional[int] = None,
                      remat: bool = True):
@@ -374,10 +405,22 @@ def build_train_step(model, optimizer, averager, mesh, *, phase: int,
         if averager.grad_comm:
             grads = (averager.sync(grads) if sync
                      else averager.comm(grads, phase))
-        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        # non-finite guard on the (pod-mean, for fsdp; group/global-mean,
+        # for grad_comm averagers) gradients: a poisoned replica skips its
+        # update and keeps averaging in its last good weights
+        finite = tree_all_finite(grads)
+        if sharded:
+            # psum-scattered pod-mean shards can carry the NaN on one
+            # slice only; every shard of the pod must agree to skip
+            finite = jax.lax.pmin(finite.astype(jnp.int32),
+                                  averager.sharding.shard_axis) > 0
+        new_params, new_opt, skipped = guarded_update(
+            optimizer, grads, opt_state, params, finite=finite)
         if not averager.grad_comm:
             new_params = (averager.sync(new_params) if sync
                           else averager.comm(new_params, phase))
+        metrics = dict(metrics)
+        metrics["skipped_nonfinite"] = skipped
         metrics = {k: jax.lax.pmean(v.astype(jnp.float32), dp)
                    for k, v in metrics.items()}
         return new_params, new_opt, metrics

@@ -303,3 +303,79 @@ def test_kill_rejoin_training_survives_and_rejoiner_bit_identical():
         print("ELASTIC_KILL_REJOIN_OK")
     """, devices=8, timeout=600)
     assert "ELASTIC_KILL_REJOIN_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Property: controller invariants under adversarial interleavings
+# ---------------------------------------------------------------------------
+
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+_OPS = ("leave", "join", "barrier")
+
+
+def _drive_controller(ops, pool):
+    """Replay an arbitrary leave/join/barrier interleaving and check every
+    invariant the launch layer leans on after each op:
+
+    * the active world is always a power of two >= min_world;
+    * active/spares/pending are disjoint, no worker duplicated;
+    * ``join`` never promotes — the active set only grows at the barrier;
+    * a shrink's ``keep_rows`` maps old active rows onto the new world;
+    * the epoch bumps exactly when the active set changes, and the
+      history holds one snapshot per epoch;
+    * rejected ops (unknown worker, below-min-world shrink) leave the
+      controller untouched.
+    """
+    mc = MembershipController(range(pool), min_world=2)
+    last_epoch = mc.epoch
+    for op, w in ops:
+        before = mc.membership
+        try:
+            if op == "leave":
+                ev = mc.leave(w)
+            elif op == "join":
+                ev = mc.join(w)
+                assert ev.kind in ("defer", "noop")
+                assert mc.membership.active == before.active, \
+                    "join promoted outside the sync barrier"
+            else:
+                ev = mc.at_sync_barrier()
+        except (ValueError, RuntimeError):
+            assert mc.membership == before, \
+                "a rejected op must not mutate membership"
+            continue
+        m = mc.membership
+        n = m.world_size
+        assert n >= mc.min_world and n & (n - 1) == 0, m
+        seen = list(m.active) + list(m.spares) + list(m.pending)
+        assert len(seen) == len(set(seen)), m
+        if ev.kind == "shrink":
+            assert [before.active[i] for i in ev.keep_rows] == list(m.active)
+        assert mc.epoch >= last_epoch
+        if set(m.active) != set(before.active):
+            assert mc.epoch == last_epoch + 1
+            assert ev.kind in ("shrink", "regrow"), ev
+        else:
+            assert mc.epoch == last_epoch
+        last_epoch = mc.epoch
+    assert [h.epoch for h in mc.history] == list(range(mc.epoch + 1))
+
+
+@given(ops=st.lists(st.tuples(st.sampled_from(_OPS), st.integers(0, 13)),
+                    max_size=50),
+       pool=st.integers(4, 12))
+@settings(max_examples=80, deadline=None)
+def test_membership_invariants_property(ops, pool):
+    _drive_controller(ops, pool)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_membership_invariants_seeded_interleavings(seed):
+    """Deterministic stand-in for the property test when hypothesis is
+    unavailable: seeded random 60-op interleavings over a 4..12 pool."""
+    rng = np.random.default_rng(seed)
+    pool = int(rng.integers(4, 13))
+    ops = [(_OPS[int(rng.integers(3))], int(rng.integers(14)))
+           for _ in range(60)]
+    _drive_controller(ops, pool)

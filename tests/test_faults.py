@@ -1,0 +1,281 @@
+"""Deterministic fault injection & the chaos matrix (DESIGN.md §13).
+
+Host-side tests pin the `core.faults` primitives: event validation, the
+sorted/immutable `FaultSchedule`, fingerprint stability, the seeded
+§V-B straggler trace, and the wall-clock `FaultInjector` effects
+(delay sleeps, crash raises, hang raises after the watchdog grace).
+
+The subprocess tests run the chaos matrix on the forced-host CPU mesh —
+the same `run_under_faults` code path as the ``--chaos`` CI smoke.
+Nothing in any test body calls ``leave()``: schedules only silence
+workers, and every shrink/regrow below is detector-driven.
+
+* hang-mid-round + double fault: two workers hang permanently in the
+  same round; one suspect shrinks 4 -> 2, the batch-mate verdict drains
+  the spare, both confirm dead, the world never regrows.
+* crash-before-sync + rejoin, replayed twice: a worker crashes right
+  before a tau-sync, is detected, rejoins at the next barrier — and the
+  whole run replays **bit-identically** (state digest, events, losses).
+* flapping worker: a straggler trips one shrink/rejoin cycle; the flap
+  backoff doubles its suspect timeout so an identical second delay is
+  absorbed without churning the membership again.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from subproc import run_sub as _run_sub
+
+from repro.core import faults
+from repro.core.faults import (FaultEvent, FaultInjector, FaultSchedule,
+                               InjectedCrash, InjectedHang, crash, delay,
+                               hang)
+
+
+# ---------------------------------------------------------------------------
+# FaultEvent validation + builders
+# ---------------------------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(0, 0, "melt")
+    with pytest.raises(ValueError):
+        FaultEvent(0, 0, faults.DELAY, ms=0.0)
+    with pytest.raises(ValueError):
+        FaultEvent(5, 0, faults.HANG, until=5)   # recovery must be later
+
+
+def test_builders():
+    d = delay(3, 7, 320.0)
+    assert (d.step, d.worker, d.kind, d.ms) == (7, 3, faults.DELAY, 320.0)
+    h = hang(1, 2, recover_after=3)
+    assert (h.kind, h.until) == (faults.HANG, 5)
+    assert hang(1, 2).until is None
+    c = crash(0, 4, rejoin_after=2)
+    assert (c.kind, c.until) == (faults.CRASH, 6)
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule: ordering, lookup, fingerprint determinism
+# ---------------------------------------------------------------------------
+
+def test_schedule_sorted_and_lookup():
+    s = FaultSchedule.of(crash(0, 9), delay(2, 1, 10.0), hang(1, 1))
+    assert [e.step for e in s] == [1, 1, 9]
+    assert len(s) == 3 and s.max_step == 9
+    assert {e.kind for e in s.at(1)} == {faults.DELAY, faults.HANG}
+    assert s.at(5) == ()
+    assert s.delays_at(1) == {2: 10.0 / 1e3}
+    assert FaultSchedule().max_step == -1
+
+
+def test_fingerprint_is_order_independent_and_content_sensitive():
+    a = FaultSchedule.of(delay(2, 1, 10.0), hang(1, 3))
+    b = FaultSchedule.of(hang(1, 3), delay(2, 1, 10.0))
+    assert a.fingerprint() == b.fingerprint()
+    c = FaultSchedule.of(hang(1, 3), delay(2, 1, 11.0))
+    assert a.fingerprint() != c.fingerprint()
+    assert a.fingerprint() in repr(a)
+
+
+def test_straggler_trace_is_seed_deterministic():
+    a = FaultSchedule.straggler_trace(16, 50, seed=7)
+    b = FaultSchedule.straggler_trace(16, 50, seed=7)
+    assert a.events == b.events
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != FaultSchedule.straggler_trace(
+        16, 50, seed=8).fingerprint()
+    # every step: exactly n_stragglers distinct delayed workers
+    for t in range(50):
+        evs = a.at(t)
+        assert len(evs) == 2 and len({e.worker for e in evs}) == 2
+        assert all(e.kind == faults.DELAY and e.ms == 320.0 for e in evs)
+
+
+def test_straggler_trace_clamps_to_world():
+    s = FaultSchedule.straggler_trace(2, 4, n_stragglers=5)
+    assert all(len(s.at(t)) == 2 for t in range(4))
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: wall-clock effects for one worker identity
+# ---------------------------------------------------------------------------
+
+def test_injector_delay_sleeps_scaled_and_ignores_other_workers():
+    slept = []
+    s = FaultSchedule.of(delay(0, 2, 100.0), delay(1, 2, 999.0))
+    inj = FaultInjector(s, worker=0, time_scale=0.5, sleep=slept.append)
+    inj.before_step(0)
+    inj.before_step(2)
+    assert slept == [pytest.approx(0.05)]     # 100 ms * 0.5, worker 1 skipped
+    assert inj.delayed_ms == 100.0
+
+
+def test_injector_crash_raises():
+    inj = FaultInjector(FaultSchedule.of(crash(0, 3)), worker=0,
+                        sleep=lambda _: None)
+    inj.before_step(2)
+    with pytest.raises(InjectedCrash):
+        inj.before_step(3)
+
+
+def test_injector_hang_sleeps_grace_then_raises():
+    slept = []
+    inj = FaultInjector(FaultSchedule.of(hang(0, 1)), worker=0,
+                        hang_grace_s=0.02, sleep=slept.append)
+    with pytest.raises(InjectedHang):
+        inj.before_step(1)
+    assert slept == [pytest.approx(0.02)]
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode cost model (cluster_sim) replays the same trace
+# ---------------------------------------------------------------------------
+
+def test_degraded_mode_scenario_beats_wait_for_all_and_stays_bounded():
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks"))
+    from cluster_sim import degraded_mode_scenario
+
+    rep = degraded_mode_scenario(P=16, steps=200, tau=10, seed=0)
+    assert rep["schedule_fingerprint"] == FaultSchedule.straggler_trace(
+        16, 200, seed=0).fingerprint()
+    assert rep["goodput_speedup"] > 1.0
+    assert rep["staleness_bounded"]
+    assert 0 < rep["peak_staleness_age"] <= rep["staleness_bound"] == 10
+    assert rep["skipped_contributions"] > 0
+    # deterministic: same seed, same numbers
+    rep2 = degraded_mode_scenario(P=16, steps=200, tau=10, seed=0)
+    assert rep2 == rep
+
+
+# ---------------------------------------------------------------------------
+# The chaos matrix (subprocess, detector-driven — no scripted leaves)
+# ---------------------------------------------------------------------------
+
+_PREAMBLE = """
+    from repro.configs import get_config
+    from repro.core import faults
+    from repro.core.faults import FaultSchedule
+    from repro.core.health import DetectorConfig
+    from repro.launch.elastic import ElasticTrainer
+
+    # Off-grid timeouts: the virtual clock lands on multiples of 0.05 s,
+    # and the default 0.25/0.30 thresholds sit exactly on that grid, so
+    # whether a boundary poll fires depends on float rounding of
+    # t*0.1+0.05.  0.28/0.33 keep >=0.02 s of margin to every grid point,
+    # making the suspect/confirm rounds clock-noise-proof.
+    DET = DetectorConfig(suspect_timeout_s=0.28, confirm_timeout_s=0.33)
+
+    def make_et(world=4, tau=4, seed=0):
+        cfg = get_config("qwen3-0.6b", smoke=True)
+        return ElasticTrainer(cfg, jax.devices()[:world], tau=tau,
+                              group_size=2, seed=seed, learning_rate=0.05)
+
+    def kinds(rep):
+        return [e["kind"] for e in rep["events"]]
+"""
+
+
+def test_chaos_hang_mid_round_double_fault_confirms_dead():
+    """Two workers hang permanently in the same round (double fault).
+    The detector suspects both at one deadline: the first verdict
+    shrinks 4 -> 2, the batch-mate verdict (re-stamped to the bumped
+    epoch) drains the demoted spare, and both later confirm dead —
+    after which the ledger stops aging them and the world stays 2."""
+    out = _run_sub("""
+        et = make_et()
+        sched = FaultSchedule.of(faults.hang(1, 2), faults.hang(3, 2))
+        rep = et.run_under_faults(10, sched, detector=DET)
+
+        ks = kinds(rep)
+        assert ks.count("hang") == 2 and ks.count("suspect") == 2, ks
+        assert ks.count("shrink") == 1, ks          # batch-mate drains a spare
+        assert ks.count("confirm-dead") == 2, ks
+        for absent in ("recover", "wake", "regrow", "stale-verdict-rejected"):
+            assert absent not in ks, ks
+        assert [r["world"] for r in rep["records"]] == [4] * 4 + [2] * 6
+        assert [e["kind"] for e in et.epoch_log] == ["shrink"]
+        m = et.controller.membership
+        assert m.world_size == 2 and not m.spares and not m.pending, m
+        st = rep["staleness"]
+        assert st["total_skipped"] == {1: 4} and st["ages"] == {}, st
+        assert st["peak_age"] == 4 == et.tau, st
+        assert np.isfinite([r["loss"] for r in rep["records"]]).all()
+        print("CHAOS_DOUBLE_FAULT_OK")
+    """, devices=8, timeout=600, preamble=_PREAMBLE)
+    assert "CHAOS_DOUBLE_FAULT_OK" in out
+
+
+def test_chaos_crash_before_sync_rejoins_and_replays_bit_identical():
+    """A worker crashes right before a tau-sync; the barrier proceeds
+    with the old world, detection shrinks it next round, the rejoin is
+    promoted at the following barrier — and replaying the identical
+    `FaultSchedule` on a fresh trainer reproduces the survivor state
+    **bit-identically** (digest, events, per-step losses)."""
+    out = _run_sub("""
+        sched = FaultSchedule.of(faults.crash(1, 6, rejoin_after=3))
+
+        def one_run():
+            et = make_et()
+            rep = et.run_under_faults(13, sched, detector=DET)
+            return et, rep
+
+        et, rep = one_run()
+        ks = kinds(rep)
+        for needed in ("crash", "suspect", "shrink", "wake", "recover",
+                       "regrow"):
+            assert needed in ks, ks
+        assert [r["world"] for r in rep["records"]] == \\
+            [4] * 8 + [2] * 4 + [4], [r["world"] for r in rep["records"]]
+        assert [e["kind"] for e in et.epoch_log] == ["shrink", "regrow"]
+        st = rep["staleness"]
+        assert st["total_skipped"] == {1: 4} and st["ages"] == {}, st
+        m = et.controller.membership
+        assert m.world_size == 4 and not m.spares and not m.pending, m
+
+        et2, rep2 = one_run()
+        assert rep2["schedule_fingerprint"] == rep["schedule_fingerprint"]
+        assert rep2["state_digest"] == rep["state_digest"], \\
+            "replaying the same FaultSchedule must be bit-identical"
+        assert rep2["events"] == rep["events"]
+        assert rep2["staleness"] == rep["staleness"]
+        assert [r["loss"] for r in rep2["records"]] == \\
+            [r["loss"] for r in rep["records"]]
+        print("CHAOS_REPLAY_OK")
+    """, devices=8, timeout=600, preamble=_PREAMBLE)
+    assert "CHAOS_REPLAY_OK" in out
+
+
+def test_chaos_flapping_worker_backoff_absorbs_second_delay():
+    """A 320 ms straggler trips suspect -> shrink -> recover -> regrow
+    (one flap).  The flap doubles its suspect timeout, so the identical
+    delay later is absorbed: silence peaks at 0.45 s — past the 0.25 s
+    base timeout that caught it the first time, under the backed-off
+    0.5 s — and the membership never churns again."""
+    out = _run_sub("""
+        et = make_et()
+        sched = FaultSchedule.of(faults.delay(1, 2, 320.0),
+                                 faults.delay(1, 9, 320.0))
+        rep = et.run_under_faults(14, sched)
+
+        ks = kinds(rep)
+        assert ks.count("delay") == 2, ks
+        assert ks.count("suspect") == 1, \\
+            "backoff failed: the second identical delay was suspected again"
+        assert ks.count("shrink") == 1 and ks.count("regrow") == 2, ks
+        assert ks.count("recover") == 1 and "confirm-dead" not in ks, ks
+        assert [r["world"] for r in rep["records"]] == \\
+            [4] * 4 + [2] * 4 + [4] * 6, [r["world"] for r in rep["records"]]
+        assert [e["kind"] for e in et.epoch_log] == ["shrink", "regrow"]
+        st = rep["staleness"]
+        assert st["total_skipped"] == {1: 4} and st["ages"] == {}, st
+        m = et.controller.membership
+        assert m.world_size == 4 and not m.spares and not m.pending, m
+        assert np.isfinite([r["loss"] for r in rep["records"]]).all()
+        print("CHAOS_FLAP_OK")
+    """, devices=8, timeout=600, preamble=_PREAMBLE)
+    assert "CHAOS_FLAP_OK" in out

@@ -1,0 +1,139 @@
+"""Non-finite gradient guard (DESIGN.md §13).
+
+Host-side tests pin `guarded_update` exactly: bit-exact equal to the
+bare ``optimizer.update`` when the gradients are finite, bit-exact
+passthrough of params AND optimiser state when any leaf carries a
+NaN/Inf, and the explicit ``finite`` override (the hook the fsdp step
+uses after pmin-reducing the verdict over the shard axis).
+
+The subprocess test drives the guard end-to-end through a real
+`Trainer` on a 2-replica mesh with the identity-comm ``local_sgd``
+averager (sync pushed past the horizon), so replicas never exchange
+state: one replica's weights are poisoned with NaN, and every step it
+alone skips its update — its row stays bit-frozen, the healthy row
+keeps training, and ``skipped_nonfinite`` surfaces through the metrics
+(0.5 = 1 of 2 replicas) and the Trainer's running counter.  The same
+subprocess then arms a `FaultInjector` on the live Trainer and checks
+the scheduled `InjectedCrash` fires inside ``step_once``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from subproc import run_sub as _run_sub
+
+from repro.optim import sgd
+from repro.train import guarded_update, tree_all_finite
+
+
+def _bit_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.ascontiguousarray(x), np.ascontiguousarray(y)
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x.reshape(-1).view(np.uint8),
+                                      y.reshape(-1).view(np.uint8))
+
+
+def test_tree_all_finite():
+    assert bool(tree_all_finite({"a": jnp.ones(3), "b": jnp.zeros(2)}))
+    assert not bool(tree_all_finite({"a": jnp.array([1.0, np.nan])}))
+    assert not bool(tree_all_finite({"a": jnp.array([np.inf])}))
+    assert bool(tree_all_finite({}))  # empty tree is vacuously finite
+
+
+def test_guarded_update_is_bit_exact_when_finite():
+    opt = sgd(0.1, momentum=0.9)
+    params = {"w": jnp.arange(4.0), "b": jnp.ones((2,), jnp.bfloat16)}
+    state = opt.init(params)
+    grads = {"w": jnp.ones(4), "b": jnp.full((2,), 0.5, jnp.bfloat16)}
+    new_p, new_o, skipped = guarded_update(opt, grads, state, params)
+    ref_p, ref_o = opt.update(grads, state, params)
+    assert not bool(skipped)
+    _bit_equal(new_p, ref_p)
+    _bit_equal(new_o, ref_o)
+
+
+def test_guarded_update_passes_through_on_nan_and_inf():
+    opt = sgd(0.1, momentum=0.9)
+    params = {"w": jnp.arange(4.0)}
+    state = opt.init(params)
+    # momentum non-zero so an unguarded update would visibly change it
+    _, state = opt.update({"w": jnp.ones(4)}, state, params)
+    for poison in (np.nan, np.inf, -np.inf):
+        grads = {"w": jnp.array([1.0, poison, 1.0, 1.0])}
+        new_p, new_o, skipped = guarded_update(opt, grads, state, params)
+        assert bool(skipped)
+        _bit_equal(new_p, params)
+        _bit_equal(new_o, state)
+
+
+def test_guarded_update_explicit_finite_override():
+    opt = sgd(0.1)
+    params = {"w": jnp.arange(4.0)}
+    state = opt.init(params)
+    grads = {"w": jnp.ones(4)}   # finite, but the pod voted to skip
+    new_p, new_o, skipped = guarded_update(opt, grads, state, params,
+                                           finite=jnp.asarray(False))
+    assert bool(skipped)
+    _bit_equal(new_p, params)
+
+
+def test_poisoned_replica_skips_alone_and_injector_crashes_trainer():
+    out = _run_sub("""
+        from repro.configs import get_config
+        from repro.core.faults import (FaultInjector, FaultSchedule,
+                                       InjectedCrash, crash)
+        from repro.core.replica import ReplicaState
+        from repro.launch.mesh import mesh_over
+        from repro.launch.train import Trainer
+
+        cfg = get_config("qwen3-0.6b", smoke=True)
+        mesh = mesh_over(jax.devices()[:2], (2, 1), ("data", "model"))
+        # identity comm: sync_period far past the run, no grad averaging
+        tr = Trainer(cfg, mesh, averager="local_sgd", tau=10_000,
+                     learning_rate=0.1, seed=0)
+        host = jax.device_get(tr.state)
+
+        def poison(a):
+            a = np.array(a)
+            a[1] = np.nan
+            return a
+
+        bad_params = jax.tree.map(poison, host.params)
+        tr = Trainer(cfg, mesh, averager="local_sgd", tau=10_000,
+                     learning_rate=0.1, seed=0,
+                     init_state=ReplicaState(bad_params, host.opt_state,
+                                             host.step, host.phase))
+        with compat.set_mesh(mesh):
+            for t in range(3):
+                tr.step_once(t)
+        assert tr.last_metrics["skipped_nonfinite"] == 0.5, tr.last_metrics
+        assert tr.skipped_nonfinite == 3.0, tr.skipped_nonfinite
+
+        after = jax.device_get(tr.state)
+        for leaf, bad in zip(jax.tree.leaves(after.params),
+                             jax.tree.leaves(bad_params)):
+            a = np.asarray(leaf, np.float32)
+            assert np.isnan(a[1]).all(), "poisoned row must stay frozen"
+            assert np.isfinite(a[0]).all(), "healthy row must keep training"
+        for leaf, init in zip(jax.tree.leaves(after.opt_state),
+                              jax.tree.leaves(host.opt_state)):
+            np.testing.assert_array_equal(np.asarray(leaf)[1],
+                                          np.asarray(init)[1])
+        assert int(after.step) == 3   # step counter advances regardless
+
+        # the wall-clock injector hooks the same step_once
+        tr.fault_injector = FaultInjector(
+            FaultSchedule.of(crash(0, 4)), worker=0)
+        with compat.set_mesh(mesh):
+            tr.step_once(3)           # no fault scheduled here
+            try:
+                tr.step_once(4)
+                raise SystemExit("InjectedCrash did not fire")
+            except InjectedCrash:
+                pass
+        print("NONFINITE_GUARD_OK")
+    """, devices=8, timeout=420)
+    assert "NONFINITE_GUARD_OK" in out

@@ -124,3 +124,139 @@ def test_checkpoint_roundtrip_and_consolidate():
     stacked = {"w": jnp.stack([jnp.zeros((3,)), jnp.ones((3,)) * 2.0])}
     cons = consolidate(stacked)
     np.testing.assert_allclose(np.asarray(cons["w"]), [1.0, 1.0, 1.0])
+
+
+# -- atomic checkpointing (DESIGN.md §13) ------------------------------------
+
+def _tiny_ckpt():
+    params = {"w": jnp.arange(6, dtype=jnp.float32),
+              "b": {"x": jnp.ones((2, 3), jnp.bfloat16)}}
+    opt = {"m": jnp.zeros((6,), jnp.float32)}
+    return params, opt
+
+
+def test_atomic_save_leaves_no_tmp_files():
+    params, opt = _tiny_ckpt()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, opt_state=opt, step=1)
+        assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+        assert sorted(os.listdir(d)) == ["manifest.json", "opt_state.npz",
+                                         "params.npz"]
+
+
+def test_corrupted_leaf_bytes_fail_the_checksum():
+    from repro.checkpoint import ChecksumError
+
+    params, opt = _tiny_ckpt()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, opt_state=opt, step=1)
+        # bit rot / torn write: data no longer matches the manifest crc32
+        stored = dict(np.load(os.path.join(d, "params.npz")))
+        stored["w"] = stored["w"] + 1
+        np.savez(os.path.join(d, "params.npz"), **stored)
+        with pytest.raises(ChecksumError, match="torn or corrupted"):
+            load_checkpoint(d, params, opt)
+
+
+def test_crash_before_manifest_commit_preserves_previous_checkpoint():
+    """Kill the writer between the data rename and the manifest rename
+    (the `core.faults.InjectedCrash` the chaos harness schedules): the
+    directory then holds NEW data under the OLD manifest.  Loading must
+    refuse the torn combination, and after the stale data is discarded
+    the previous complete checkpoint is still intact — a crash mid-save
+    never loads silently wrong state."""
+    from repro.checkpoint import ChecksumError
+    from repro.checkpoint import ckpt as ckpt_mod
+    from repro.core.faults import InjectedCrash
+
+    params, opt = _tiny_ckpt()
+    newer = jax.tree.map(lambda a: a * 3 + 1, params)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, opt_state=opt, step=1)
+        real_replace = ckpt_mod._replace
+
+        def crash_on_manifest(src, dst):
+            if dst.endswith("manifest.json"):
+                raise InjectedCrash("killed between data and manifest rename")
+            real_replace(src, dst)
+
+        ckpt_mod._replace = crash_on_manifest
+        try:
+            with pytest.raises(InjectedCrash):
+                save_checkpoint(d, newer, opt_state=opt, step=2)
+        finally:
+            ckpt_mod._replace = real_replace
+
+        # torn: step-2 data under the step-1 manifest -> refused
+        with pytest.raises(ChecksumError):
+            load_checkpoint(d, params, opt)
+
+        # a retried save commits atomically and wins
+        save_checkpoint(d, newer, opt_state=opt, step=2)
+        restored, _, step = load_checkpoint(d, params, opt)
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(newer["w"]))
+
+
+def test_crash_before_any_rename_leaves_no_checkpoint_at_all():
+    from repro.checkpoint import ckpt as ckpt_mod
+    from repro.core.faults import InjectedCrash
+
+    params, opt = _tiny_ckpt()
+    with tempfile.TemporaryDirectory() as d:
+        real_replace = ckpt_mod._replace
+        ckpt_mod._replace = lambda s, t: (_ for _ in ()).throw(
+            InjectedCrash("killed before the first rename"))
+        try:
+            with pytest.raises(InjectedCrash):
+                save_checkpoint(d, params, opt_state=opt, step=1)
+        finally:
+            ckpt_mod._replace = real_replace
+        # only a .tmp remains; a reader sees "no checkpoint", never garbage
+        assert all(f.endswith(".tmp") for f in os.listdir(d))
+        with pytest.raises(FileNotFoundError):
+            load_checkpoint(d, params, opt)
+
+
+def test_pre_checksum_checkpoints_still_load():
+    """Manifests written before this PR carry no checksums; they load
+    unverified rather than erroring (backward compatibility)."""
+    import json
+
+    params, opt = _tiny_ckpt()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, opt_state=opt, step=7)
+        mpath = os.path.join(d, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest.pop("checksums")
+        manifest.pop("opt_checksums")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        restored, ropt, step = load_checkpoint(d, params, opt)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(params["w"]))
+
+
+def test_replica_state_checkpoint_is_checksum_verified_too():
+    """`load_replica_state` routes through the same checksummed rebuild,
+    so a torn replica-state save is refused as well."""
+    from repro.checkpoint import (ChecksumError, load_replica_state,
+                                  save_replica_state)
+    from repro.core.replica import ReplicaState
+
+    params, opt = _tiny_ckpt()
+    state = ReplicaState.create(params, opt, step=3)
+    with tempfile.TemporaryDirectory() as d:
+        save_replica_state(d, state)
+        back = load_replica_state(d, state)
+        assert int(back.step) == 3
+        np.testing.assert_array_equal(np.asarray(back.params["w"]),
+                                      np.asarray(params["w"]))
+        stored = dict(np.load(os.path.join(d, "params.npz")))
+        stored["w"] = stored["w"] * 2
+        np.savez(os.path.join(d, "params.npz"), **stored)
+        with pytest.raises(ChecksumError):
+            load_replica_state(d, state)
