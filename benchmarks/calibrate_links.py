@@ -48,8 +48,11 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core.plan import DEFAULT_LINK_CONSTANTS_PATH
 
-OUT_JSON = os.path.join(_ROOT, "LINK_CONSTANTS.json")
+# One canonical tracked location (repo root) shared with
+# Topology.with_measured's default — there is no second copy to drift.
+OUT_JSON = DEFAULT_LINK_CONSTANTS_PATH
 SMALL_ELEMS = 128                      # one lane: latency-dominated
 _WARMUP = 3
 

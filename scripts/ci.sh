@@ -95,7 +95,17 @@ PYTHONPATH=src python benchmarks/cluster_sim.py --churn
 # Link-constant calibration scaffold smoke (ROADMAP: measured
 # alpha/beta/gamma): microbench ppermute/all-gather per mesh axis on the
 # 8-device CPU mesh and round-trip the JSON through
-# Topology.with_measured.  Tiny payloads — a few seconds; the tracked
-# LINK_CONSTANTS.json is regenerated manually with full payloads.
+# Topology.with_measured.  Tiny payloads — a few seconds.  The scratch
+# output name is deliberately NOT LINK_CONSTANTS.json: the one canonical
+# copy lives at the repo root (plan.DEFAULT_LINK_CONSTANTS_PATH) and is
+# regenerated manually with full payloads.
 python benchmarks/calibrate_links.py --smoke \
-  --out experiments/LINK_CONSTANTS.json
+  --out experiments/LINK_CONSTANTS.smoke.json
+
+# Serving gate (DESIGN.md §14): request-level simulator over the analytic
+# cost model — continuous-batching decode loop with inline prefill stalls
+# (colocated) vs split prefill/decode pods with DCN KV transfer
+# (disaggregated).  Writes the tracked BENCH_serving.json; exits non-zero
+# unless disaggregation wins p99 inter-token latency AND holds goodput at
+# the modeled operating point.  Model-only, a few seconds.
+python benchmarks/serve_sim.py --check

@@ -50,6 +50,7 @@ gather/scatter collectives the train step composes around it.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -103,6 +104,15 @@ DEFAULT_LINK = LinkClass("link")
 # (ROADMAP: calibration) via LinkClass(...) when a real pod is available.
 ICI = LinkClass("ici", alpha=1e-6, beta=1.0 / 100e9)
 DCN = LinkClass("dcn", alpha=50e-6, beta=1.0 / 10e9)
+
+# The one canonical location of the calibrated link constants.  Every loader
+# (``Topology.with_measured`` with no path, ``benchmarks/calibrate_links.py``'s
+# default ``--out``, the serving KV-transfer cost model) resolves through this
+# constant so there is exactly one tracked file to regenerate.
+DEFAULT_LINK_CONSTANTS_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "LINK_CONSTANTS.json")
 
 
 @dataclass(frozen=True)
@@ -193,10 +203,12 @@ class Topology:
     def classes_in_use(self) -> Tuple[int, ...]:
         return tuple(sorted(set(self.axis_class)))
 
-    def with_measured(self, path: str) -> "Topology":
+    def with_measured(self, path: Optional[str] = None) -> "Topology":
         """This topology with calibrated link constants loaded from disk.
 
-        ``path`` is a ``LINK_CONSTANTS.json`` written by
+        ``path`` defaults to :data:`DEFAULT_LINK_CONSTANTS_PATH` (the one
+        tracked ``LINK_CONSTANTS.json`` at the repo root); it is a file
+        written by
         ``benchmarks/calibrate_links.py`` (ROADMAP: measured alpha/beta/
         gamma constants): per mesh axis, the microbenched collective launch
         latency, inverse wire bandwidth, and combine throughput.  Each link
@@ -210,7 +222,7 @@ class Topology:
         ``bucket_bytes`` survive.
         """
         import json
-        with open(path) as f:
+        with open(path or DEFAULT_LINK_CONSTANTS_PATH) as f:
             data = json.load(f)
         axes = data.get("axes", {})
         new_classes = []
@@ -314,6 +326,29 @@ def choose_class_bucket_bytes(
         if best_t is None or t < best_t:
             best, best_t = cand, t
     return best
+
+
+def link_transfer_seconds(payload_bytes: float, link: LinkClass, *,
+                          message_bytes: Optional[int] = None) -> float:
+    """Modeled seconds to move ``payload_bytes`` point-to-point on ``link``.
+
+    The serving KV-transfer path (serve/kv_transfer.py) is not a collective:
+    a prefill pod streams one request's KV blocks to a decode pod, so the
+    cost is the plain alpha-beta line — one launch per message plus wire
+    time — with the payload packed into ``message_bytes``-sized messages.
+    ``message_bytes=None`` picks this link's modeled-optimal budget via
+    :func:`choose_class_bucket_bytes` (non-overlapped: a unidirectional
+    send has no combine to hide behind the wire), which is exactly how the
+    bucketing layer packs the blocks in practice.
+    """
+    payload = max(int(payload_bytes), 0)
+    if payload == 0:
+        return 0.0
+    if message_bytes is None:
+        message_bytes = choose_class_bucket_bytes(payload, link,
+                                                  overlap=False)
+    n_messages = max(1, -(-payload // int(message_bytes)))
+    return n_messages * link.alpha + payload * link.beta
 
 
 def ring_sync_seconds(payload_bytes: float, P: int, link: LinkClass,

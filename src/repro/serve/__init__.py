@@ -1,3 +1,19 @@
 from repro.serve.decode import build_serve_step, build_prefill, cache_shardings
+from repro.serve.kv_cache import (BlockPool, OutOfBlocks, init_paged_pool,
+                                  build_paged_decode, build_paged_prefill)
+from repro.serve.scheduler import Request, ServeScheduler
+from repro.serve.kv_transfer import (KVConnector, LinkCostedConnector,
+                                     InProcessTransport,
+                                     DisaggregatedScheduler)
+from repro.serve.handoff import (serving_weights_from_state,
+                                 serving_weights_from_checkpoint)
 
-__all__ = ["build_serve_step", "build_prefill", "cache_shardings"]
+__all__ = [
+    "build_serve_step", "build_prefill", "cache_shardings",
+    "BlockPool", "OutOfBlocks", "init_paged_pool",
+    "build_paged_decode", "build_paged_prefill",
+    "Request", "ServeScheduler",
+    "KVConnector", "LinkCostedConnector", "InProcessTransport",
+    "DisaggregatedScheduler",
+    "serving_weights_from_state", "serving_weights_from_checkpoint",
+]

@@ -35,6 +35,10 @@ def cache_shardings(mesh, cache_shapes, batch: int, model_axis="model"):
     rank 3-5 with B in position 1. We shard B over dp when divisible, else
     the largest seq-like dim; KH goes on the model axis when divisible,
     else hd.
+
+    Raises ``ValueError`` when the dp extent divides *neither* the batch
+    nor any other dim of a leaf — silently replicating a cache across a
+    multi-device dp mesh is an OOM-in-production bug, not a fallback.
     """
     dp = _dp(mesh)
     n_dp = 1
@@ -45,12 +49,16 @@ def cache_shardings(mesh, cache_shapes, batch: int, model_axis="model"):
     def spec(leaf):
         shape = leaf.shape
         entries = [None] * len(shape)
-        # locate batch dim: first dim equal to `batch` after leading stack dims
-        b_idx = None
-        for i, s in enumerate(shape):
-            if s == batch and i >= 1 or (i == 0 and len(shape) <= 2 and s == batch):
-                b_idx = i
-                break
+        # Locate the batch dim.  Several dims can equal `batch` (a ring
+        # window, seq, or head count sized exactly B), so collect every
+        # candidate and tiebreak on the canonical position: caches in this
+        # repo put B at dim 1 (after the layer-stack dim) for every rank>=3
+        # leaf, and at dim 0 only for rank<=2 recurrent vectors.
+        cands = [i for i, s in enumerate(shape)
+                 if (s == batch and i >= 1)
+                 or (i == 0 and len(shape) <= 2 and s == batch)]
+        b_idx = 1 if len(cands) > 1 and 1 in cands else \
+            (cands[0] if cands else None)
         if b_idx is not None and batch % n_dp == 0 and batch >= n_dp:
             entries[b_idx] = dp
         else:
@@ -58,6 +66,12 @@ def cache_shardings(mesh, cache_shapes, batch: int, model_axis="model"):
             cand = max(range(len(shape)), key=lambda i: shape[i])
             if shape[cand] % n_dp == 0 and (b_idx is None or cand != b_idx):
                 entries[cand] = dp
+            elif n_dp > 1:
+                raise ValueError(
+                    f"cache_shardings: no dim of cache leaf {shape} "
+                    f"(batch={batch}) divides the dp extent {n_dp}; "
+                    "refusing to silently replicate — resize the batch/"
+                    "cache or serve on a smaller dp mesh")
         # model axis: last dim (hd / channel) if divisible and not tiny
         for i in range(len(shape) - 1, -1, -1):
             if entries[i] is None and shape[i] % n_model == 0 \

@@ -1,0 +1,78 @@
+"""Train-to-serve weight handoff (DESIGN.md §14).
+
+A training run ends (or snapshots) as a :class:`~repro.core.replica.
+ReplicaState` in whatever layout its :class:`~repro.core.replica.
+ShardingPolicy` dictates — (P_dp, ...)-stacked replicated leaves, FSDP
+flat shard buckets, or the streamed (layer-grouped) bucket layout.  The
+serving engine wants exactly one thing: the single consensus params tree
+in the model's canonical structure, ready for ``model.prefill`` /
+``model.decode_step``.
+
+``serving_weights_from_state`` is that bridge, built entirely from the
+existing consolidation paths: ``consolidate_state`` averages the replica
+axis (replicated) or the pod axis + unpacks through the plan's shard
+layout (fsdp), and streamed states additionally merge the layered
+``{"stem", "layers", "head"}`` structure back to canonical via the
+model's ``ModelAPI.layered``.  Because every policy consolidates to the
+same consensus, serving weights are bit-identical no matter which layout
+the training run used (pinned in tests/test_serve_handoff.py).
+
+``serving_weights_from_checkpoint`` goes through the checkpoint
+round-trip instead (``load_replica_state`` already routes cross-policy /
+streamed restores), so a serving fleet can pick weights off disk without
+knowing how the trainer sharded them.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import replica as replica_mod
+
+
+def _merge_if_layered(tree, plan, model):
+    streamed = (plan is not None and plan.sharding.is_sharded
+                and plan.sharding.streamed)
+    if not streamed:
+        return tree
+    if model is None or model.layered is None:
+        raise ValueError(
+            "a streamed-fsdp state consolidates into the layered tree; "
+            "pass model= (with ModelAPI.layered) to merge it back to the "
+            "canonical structure")
+    return model.layered.merge(tree)
+
+
+def serving_weights_from_state(state: replica_mod.ReplicaState, *,
+                               plan=None, model=None):
+    """Consolidate a ReplicaState (any policy) into serving params.
+
+    ``plan`` is the compiled AveragingPlan the state was trained under —
+    required for FSDP states (it owns the shard layout); ``model`` is the
+    serving ``ModelAPI`` — required for streamed states (its ``layered``
+    merges the layered tree).
+    """
+    tree = replica_mod.consolidate_state(state, plan)
+    return _merge_if_layered(tree, plan, model)
+
+
+def serving_weights_from_checkpoint(path: str, template, *, plan=None,
+                                    model=None,
+                                    layered: Optional[object] = None):
+    """Load a replica-state checkpoint (any policy) as serving params.
+
+    ``template`` is the *restoring* layout's abstract ReplicaState (same
+    argument as ``load_replica_state``); the checkpoint's own policy is
+    read from its manifest, and cross-policy restores route through the
+    existing conversion paths.  Returns the canonical consensus params.
+    """
+    from repro.checkpoint import ckpt
+    sharding = ckpt.checkpoint_sharding(path)
+    layered = layered or (model.layered if model is not None else None)
+    state = ckpt.load_replica_state(path, template, sharding=sharding,
+                                    plan=plan, layered=layered)
+    tree = replica_mod.consolidate_state(
+        state, plan if sharding.is_sharded else None)
+    if sharding.is_sharded and sharding.streamed:
+        tree = _merge_if_layered(tree, plan, model)
+    return tree

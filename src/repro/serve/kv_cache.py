@@ -1,0 +1,273 @@
+"""Paged KV cache: fixed-size block pool with per-request block tables.
+
+DESIGN.md §14.  The dense decode path (serve/decode.py) keeps one
+contiguous ``(n_sb, B, max_len, KH, hd)`` cache per batch — every request
+reserves ``max_len`` positions up front and every request in the batch
+shares one scalar position.  Production serving needs neither: requests
+arrive with ragged prompt lengths, grow one token at a time, and finish at
+different steps.  This module provides the vLLM-style resolution:
+
+* a host-side :class:`BlockPool` allocator hands out fixed-size **blocks**
+  (``block_size`` token positions each) and tracks a per-request **block
+  table** — physical block ids covering exactly the request's tokens;
+* the device-side pool is the model's own cache tree with the batch/seq
+  dims replaced by ``(n_blocks, block_size)``:
+  ``{"global": {"k","v"}}`` leaves of shape
+  ``(n_sb, n_blocks, block_size, KH, hd)``;
+* :func:`build_paged_decode` runs one decode step for a whole **ragged**
+  batch: per request, gather the block table into a contiguous view
+  ``(n_sb, 1, S_view, KH, hd)`` and run the model's *own* ``decode_step``
+  on it (vmapped over requests, each at its own position), then scatter
+  the newly written K/V back to ``(table[pos // bs], pos % bs)``.
+  Because the per-request math IS ``model.decode_step`` on a cache view
+  whose valid prefix is bit-identical to the dense cache, outputs are
+  bit-exact against per-request uncontended decode (pinned in
+  tests/test_serve_paged.py);
+* :func:`build_paged_prefill` fills a request's blocks through the
+  model's own ``prefill`` (B=1) and reshapes the returned cache into
+  block rows.
+
+Block 0 is the **null block**: never allocated, owned by nobody.  Padding
+rows of a bucket-padded decode batch point their whole table at it, so
+their (discarded) gathers and scatters never touch a real request's
+blocks.  Stale contents of reused or null blocks are unobservable:
+``decode_attention`` masks every position >= the request's length to an
+exact softmax zero, and each position is written before it first becomes
+valid.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+NULL_BLOCK = 0
+
+
+class OutOfBlocks(RuntimeError):
+    """The pool cannot cover a request's tokens; caller must preempt."""
+
+
+@dataclass
+class BlockPool:
+    """Host-side block allocator with per-request block tables.
+
+    Invariants (pinned by the hypothesis property test):
+    * a block is owned by at most one request (the null block by none);
+    * ``free`` / ``evict`` return every owned block to the free list;
+    * a request's table always holds exactly
+      ``ceil(covered_tokens / block_size)`` blocks.
+    """
+    n_blocks: int
+    block_size: int
+    evictions: int = 0
+    _free: List[int] = field(default_factory=list)
+    _tables: Dict[object, List[int]] = field(default_factory=dict)
+    _tokens: Dict[object, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        if self.block_size < 1:
+            raise ValueError("block_size must be positive")
+        # LIFO free list; block 0 (null) is never handed out.
+        self._free = list(range(self.n_blocks - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+    def tokens_covered(self, rid) -> int:
+        return self._tokens.get(rid, 0)
+
+    def table(self, rid) -> List[int]:
+        return list(self._tables.get(rid, ()))
+
+    def padded_table(self, rid, max_blocks: int) -> np.ndarray:
+        """The request's table padded with the null block to a fixed width."""
+        tbl = self._tables.get(rid, [])
+        if len(tbl) > max_blocks:
+            raise ValueError(f"request {rid!r} holds {len(tbl)} blocks "
+                             f"> max_blocks={max_blocks}")
+        out = np.full((max_blocks,), NULL_BLOCK, np.int32)
+        out[:len(tbl)] = tbl
+        return out
+
+    def can_allocate(self, rid, n_tokens: int) -> bool:
+        need = self.blocks_for(n_tokens) - len(self._tables.get(rid, ()))
+        return need <= self.n_free
+
+    def allocate(self, rid, n_tokens: int) -> List[int]:
+        """Grow ``rid``'s table to cover ``n_tokens``; returns the table.
+
+        Atomic: raises :class:`OutOfBlocks` without taking anything when
+        the free list cannot cover the growth.  Never shrinks.
+        """
+        tbl = self._tables.setdefault(rid, [])
+        need = self.blocks_for(n_tokens) - len(tbl)
+        if need > self.n_free:
+            if not tbl:
+                del self._tables[rid]
+            raise OutOfBlocks(
+                f"request {rid!r} needs {need} more blocks for {n_tokens} "
+                f"tokens; {self.n_free} free of {self.n_blocks - 1}")
+        for _ in range(max(need, 0)):
+            tbl.append(self._free.pop())
+        self._tokens[rid] = max(self._tokens.get(rid, 0), int(n_tokens))
+        return list(tbl)
+
+    def free(self, rid) -> int:
+        """Release every block of ``rid``; returns how many were freed."""
+        tbl = self._tables.pop(rid, [])
+        self._tokens.pop(rid, None)
+        self._free.extend(reversed(tbl))
+        return len(tbl)
+
+    def evict(self, rid) -> int:
+        """Preemption: same as :meth:`free`, counted separately."""
+        n = self.free(rid)
+        if n:
+            self.evictions += 1
+        return n
+
+    def owned_blocks(self) -> List[int]:
+        return [b for tbl in self._tables.values() for b in tbl]
+
+    def check_invariants(self) -> None:
+        owned = self.owned_blocks()
+        assert NULL_BLOCK not in owned, "null block was allocated"
+        assert len(owned) == len(set(owned)), "a block is double-owned"
+        assert not set(owned) & set(self._free), "owned block on free list"
+        assert len(owned) + self.n_free == self.n_blocks - 1, \
+            "blocks leaked or duplicated"
+        for rid, tbl in self._tables.items():
+            assert len(tbl) == self.blocks_for(self._tokens[rid]), \
+                f"table of {rid!r} does not cover its tokens exactly"
+
+
+# ---------------------------------------------------------------------------
+# Device pool + paged model steps
+# ---------------------------------------------------------------------------
+
+def init_paged_pool(model, n_blocks: int, block_size: int):
+    """The model's cache tree with ``(B, max_len) -> (n_blocks, block_size)``.
+
+    Only full-attention ("global") caches page; sliding-window ring caches
+    keep a window per *request*, not per position, so they do not decompose
+    into shareable blocks — serving them paged needs a per-request ring
+    pool and is out of scope (fails loudly).
+    """
+    shapes = jax.eval_shape(lambda: model.init_caches(1, block_size))
+    extra = set(shapes) - {"global"}
+    if extra:
+        raise NotImplementedError(
+            f"paged serving supports full-attention (global) caches only; "
+            f"{model.cfg.name} has cache groups {sorted(shapes)}")
+
+    def mk(s):
+        # (n_sb, 1, block_size, KH, hd) -> (n_sb, n_blocks, block_size, KH, hd)
+        return jnp.zeros((s.shape[0], n_blocks) + s.shape[2:], s.dtype)
+
+    return jax.tree.map(mk, shapes)
+
+
+def _gather_view(pool_leaf, table):
+    """(n_sb, n_blocks, bs, ...), table (max_blocks,) ->
+    (n_sb, 1, max_blocks*bs, ...) — a dense single-request cache view."""
+    g = jnp.take(pool_leaf, table, axis=1)
+    return g.reshape((g.shape[0], 1, g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def build_paged_decode(model, *, block_size: int):
+    """jit'd ragged-batch decode:
+    ``step(params, pool, tables, tokens, positions) -> (pool, next_tokens)``.
+
+    ``tables`` (N, max_blocks) int32, ``tokens``/``positions`` (N,) int32 —
+    every request at its *own* position.  One compile per (N, max_blocks)
+    shape; the scheduler pads N to a bucket so recompiles happen only on
+    bucket boundaries.  Greedy next-token selection matches
+    ``build_serve_step`` (vocab-padding columns masked before argmax).
+    """
+    vocab = model.cfg.vocab
+
+    def step(params, pool, tables, tokens, positions):
+        def one(table, tok, pos):
+            views = jax.tree.map(lambda p: _gather_view(p, table), pool)
+            logits, new = model.decode_step(params, views, tok[None, None],
+                                            pos)
+
+            def written(leaf):                      # (n_sb, 1, S_view, ...)
+                leaf = leaf[:, 0]
+                return jax.lax.dynamic_slice_in_dim(leaf, pos, 1,
+                                                    axis=1)[:, 0]
+
+            lg = logits[0, -1]
+            lg = jnp.where(jnp.arange(lg.shape[-1]) < vocab, lg, cm.NEG_INF)
+            nxt = jnp.argmax(lg).astype(tok.dtype)
+            return nxt, jax.tree.map(written, new)
+
+        nxt, kv = jax.vmap(one)(tables, tokens, positions)
+        blk = jnp.take_along_axis(
+            tables, (positions // block_size)[:, None], axis=1)[:, 0]
+        slot = positions % block_size
+
+        def scatter(pool_leaf, new):                 # new (N, n_sb, ...)
+            return pool_leaf.at[:, blk, slot].set(jnp.moveaxis(new, 0, 1))
+
+        return jax.tree.map(scatter, pool, kv), nxt
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def build_paged_prefill(model, *, block_size: int):
+    """jit'd single-request prefill into the pool:
+    ``fn(params, pool, tokens, table) -> (pool, first_token)``.
+
+    ``tokens`` (1, L) int32 at the natural prompt length (prefill K/V and
+    last-token logits must be bit-identical to the uncontended reference,
+    so the prompt is never padded — one compile per distinct prompt
+    length; chunked prefill is future work).  ``table`` (max_blocks,)
+    int32 — the request's padded table; ``max_blocks * block_size`` is the
+    view length every later decode gathers, so prefill pads its cache to
+    exactly that.
+    """
+    vocab = model.cfg.vocab
+
+    def prefill(params, pool, tokens, table):
+        s_view = table.shape[0] * block_size
+        logits, caches = model.prefill(params, {"tokens": tokens}, s_view)
+
+        def scatter(pool_leaf, c):                  # c (n_sb, 1, S_view, ...)
+            c = c[:, 0].reshape((c.shape[0], table.shape[0], block_size)
+                                + c.shape[3:])
+            return pool_leaf.at[:, table].set(c)
+
+        lg = logits[0, -1]
+        lg = jnp.where(jnp.arange(lg.shape[-1]) < vocab, lg, cm.NEG_INF)
+        first = jnp.argmax(lg).astype(tokens.dtype)
+        return jax.tree.map(scatter, pool, caches), first
+
+    return jax.jit(prefill, donate_argnums=(1,))
+
+
+def extract_blocks(pool, table: np.ndarray):
+    """Host copies of the blocks in ``table``: leaves (n_sb, len(table),
+    block_size, ...).  The KV-transfer layer ships these."""
+    tbl = jnp.asarray(np.asarray(table, np.int32))
+    return jax.tree.map(lambda p: np.asarray(jnp.take(p, tbl, axis=1)), pool)
+
+
+def insert_blocks(pool, table: np.ndarray, blocks):
+    """Write shipped block rows into this pool at ``table`` (eager)."""
+    tbl = jnp.asarray(np.asarray(table, np.int32))
+    return jax.tree.map(
+        lambda p, b: p.at[:, tbl].set(jnp.asarray(b, p.dtype)), pool, blocks)

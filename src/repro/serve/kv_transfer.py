@@ -1,0 +1,235 @@
+"""Disaggregated prefill/decode: link-costed KV block transfer.
+
+DESIGN.md §14.  Prefill and decode want different hardware: prefill is a
+compute-bound batch job, decode a latency-bound memory-bound loop, and
+colocating them puts every multi-second 32k-token prefill on the decode
+batch's critical path.  The production fix (vLLM/DistServe-style) runs
+them on separate pods and streams each request's KV blocks from the
+prefill pod to the decode pod.
+
+This module reuses what training already built:
+
+* the **connector interface** (:class:`KVConnector`, ``insert``/``select``
+  over an abstracted :class:`Transport`) mirrors vLLM's
+  ``kv_connector/base.py`` — the prefill worker inserts a request's
+  blocks, the decode worker selects them, and neither knows the wire;
+* the **bucketing layer** packs the ragged per-request block tree into
+  dtype-homogeneous flat messages at the *link's* modeled-optimal budget
+  (``plan.choose_class_bucket_bytes`` — DCN wants few large messages,
+  ICI tolerates many small ones);
+* the **Topology/LinkClass constants** (calibrated
+  ``LINK_CONSTANTS.json`` via ``Topology.with_measured``) cost every
+  transfer through ``plan.link_transfer_seconds`` so placement is a
+  modeled decision, not a vibe — ``benchmarks/serve_sim.py`` consumes the
+  same numbers.
+
+Transfers are bit-exact: ``pack``/``unpack`` round-trips the block tree
+verbatim, so a disaggregated serve produces bit-identical tokens to the
+colocated scheduler (pinned in tests/test_serve_transfer.py).
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketing
+from repro.core import plan as plan_mod
+from repro.models import common as cm
+from repro.serve import kv_cache
+from repro.serve.scheduler import Request, ServeScheduler
+
+
+def kv_payload_bytes(cfg, n_tokens: int) -> int:
+    """Bytes of K+V a dense-family request carries for ``n_tokens``."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return int(2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * itemsize
+               * max(int(n_tokens), 0))
+
+
+# ---------------------------------------------------------------------------
+# Transport + connector
+# ---------------------------------------------------------------------------
+
+class Transport(abc.ABC):
+    """One-way message pipe between a prefill and a decode worker."""
+
+    @abc.abstractmethod
+    def send(self, rid, messages: Tuple[np.ndarray, ...]
+             ) -> Tuple[np.ndarray, ...]:
+        """Ship flat messages; returns what the receiver observes."""
+
+
+class InProcessTransport(Transport):
+    """Both workers in one process: the wire is a host-side copy."""
+
+    def __init__(self):
+        self.messages_sent = 0
+        self.bytes_sent = 0
+
+    def send(self, rid, messages):
+        out = tuple(np.array(m, copy=True) for m in messages)
+        self.messages_sent += len(out)
+        self.bytes_sent += sum(m.nbytes for m in out)
+        return out
+
+
+@dataclass
+class TransferStats:
+    requests: int = 0
+    blocks: int = 0
+    payload_bytes: int = 0
+    messages: int = 0
+    modeled_seconds: float = 0.0
+
+
+class KVConnector(abc.ABC):
+    """vLLM-style KV exchange point between prefill and decode workers."""
+
+    @abc.abstractmethod
+    def insert(self, rid, kv_blocks, meta: dict) -> None:
+        """Publish one finished request's KV blocks (+ metadata)."""
+
+    @abc.abstractmethod
+    def select(self, rid) -> Optional[Tuple[object, dict]]:
+        """Take a request's blocks; None when not (yet) inserted."""
+
+
+class LinkCostedConnector(KVConnector):
+    """Connector that packs blocks into link-budget-sized messages.
+
+    ``link`` prices the transfer (default: the DCN class — prefill and
+    decode pods live across the data-center network); pass a class from
+    ``Topology.with_measured(...)`` for calibrated constants.
+    ``message_bytes`` overrides the modeled-optimal per-message budget.
+    """
+
+    def __init__(self, link: plan_mod.LinkClass = plan_mod.DCN,
+                 transport: Optional[Transport] = None,
+                 message_bytes: Optional[int] = None):
+        self.link = link
+        self.transport = transport or InProcessTransport()
+        self.message_bytes = message_bytes
+        self.stats = TransferStats()
+        self._store: Dict[object, Tuple[tuple, bucketing.BucketLayout,
+                                        dict]] = {}
+
+    def budget_for(self, payload_bytes: int) -> int:
+        if self.message_bytes is not None:
+            return int(self.message_bytes)
+        return plan_mod.choose_class_bucket_bytes(
+            max(int(payload_bytes), 1), self.link, overlap=False)
+
+    def insert(self, rid, kv_blocks, meta: dict) -> None:
+        if rid in self._store:
+            raise KeyError(f"request {rid!r} already inserted")
+        payload = bucketing.tree_payload_bytes(kv_blocks)
+        budget = self.budget_for(payload)
+        # the bucketing layer flattens the block tree; the wire then chunks
+        # each flat buffer at the link's message budget (layout_for never
+        # splits a single leaf, and one KV leaf can dwarf the budget)
+        layout = bucketing.layout_for(kv_blocks, max_bucket_bytes=budget)
+        bufs = [np.asarray(m) for m in bucketing.pack(kv_blocks, layout)]
+        messages, splits = [], []
+        for buf in bufs:
+            per = max(1, budget // buf.dtype.itemsize)
+            chunks = [buf[i:i + per] for i in range(0, buf.size, per)] \
+                or [buf]
+            splits.append(len(chunks))
+            messages.extend(chunks)
+        messages = self.transport.send(rid, tuple(messages))
+        self._store[rid] = (messages, tuple(splits), layout, dict(meta))
+        self.stats.requests += 1
+        self.stats.blocks += int(meta.get("n_blocks", 0))
+        self.stats.payload_bytes += int(payload)
+        self.stats.messages += len(messages)
+        self.stats.modeled_seconds += plan_mod.link_transfer_seconds(
+            payload, self.link, message_bytes=budget)
+
+    def select(self, rid):
+        entry = self._store.pop(rid, None)
+        if entry is None:
+            return None
+        messages, splits, layout, meta = entry
+        bufs, i = [], 0
+        for n in splits:
+            bufs.append(np.concatenate(messages[i:i + n])
+                        if n > 1 else messages[i])
+            i += n
+        return bucketing.unpack(bufs, layout), meta
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated serving
+# ---------------------------------------------------------------------------
+
+def build_prefill_export(model, *, block_size: int, max_blocks: int):
+    """jit'd prefill-worker step: ``fn(params, tokens (1, L)) ->
+    (block rows (n_sb, max_blocks, bs, ...), first_token)``.
+
+    Identical math to ``build_paged_prefill`` (same ``max_len`` padding,
+    same masked greedy argmax) minus the pool scatter — the blocks leave
+    through the connector instead.
+    """
+    vocab = model.cfg.vocab
+
+    def fn(params, tokens):
+        s_view = max_blocks * block_size
+        logits, caches = model.prefill(params, {"tokens": tokens}, s_view)
+
+        def blocked(c):                              # (n_sb, 1, S_view, ...)
+            return c[:, 0].reshape((c.shape[0], max_blocks, block_size)
+                                   + c.shape[3:])
+
+        lg = logits[0, -1]
+        lg = jnp.where(jnp.arange(lg.shape[-1]) < vocab, lg, cm.NEG_INF)
+        first = jnp.argmax(lg).astype(tokens.dtype)
+        return jax.tree.map(blocked, caches), first
+
+    return jax.jit(fn)
+
+
+class DisaggregatedScheduler(ServeScheduler):
+    """The continuous-batching scheduler with prefill on another worker.
+
+    The decode side is unchanged (same pool, same bucket-padded decode
+    batches); only ``_do_prefill`` differs — the prompt's K/V is computed
+    with ``prefill_params`` (the prefill pod's weight copy), shipped
+    through the connector as packed messages, and unpacked into this
+    pool's blocks.  Outputs are bit-identical to the colocated scheduler.
+    """
+
+    def __init__(self, model, params, *, prefill_params=None,
+                 connector: Optional[KVConnector] = None,
+                 link: plan_mod.LinkClass = plan_mod.DCN, **kw):
+        super().__init__(model, params, **kw)
+        self.prefill_params = params if prefill_params is None \
+            else prefill_params
+        self.connector = connector if connector is not None \
+            else LinkCostedConnector(link=link)
+        self._export = build_prefill_export(
+            model, block_size=self.block_size,
+            max_blocks=self.max_blocks_per_req)
+
+    def _do_prefill(self, req: Request, table: np.ndarray) -> int:
+        # --- prefill worker ---
+        blocks_tree, first = self._export(self.prefill_params,
+                                          jnp.asarray(req.prompt[None]))
+        n_ship = len(self.blocks.table(req.rid))     # covers prompt_len + 1
+        shipped = jax.tree.map(lambda b: np.asarray(b[:, :n_ship]),
+                               blocks_tree)
+        self.connector.insert(req.rid, shipped,
+                              {"first": int(first), "n_blocks": n_ship,
+                               "prompt_len": req.prompt_len})
+        # --- decode worker ---
+        got = self.connector.select(req.rid)
+        assert got is not None, f"connector lost request {req.rid!r}"
+        kv_blocks, meta = got
+        self.pool = kv_cache.insert_blocks(self.pool, table[:n_ship],
+                                           kv_blocks)
+        return int(meta["first"])

@@ -1,0 +1,115 @@
+"""Train-to-serve weight handoff (DESIGN.md §14).
+
+A post-barrier training state (every replica row holding the synced
+consensus) must hand the serving engine the SAME weights — bit-for-bit —
+no matter which sharding policy the trainer ran under: replicated rows,
+FSDP shard buffers, or the layer-streamed FSDP layout.  Also pins the
+checkpoint route (``serving_weights_from_checkpoint``): a serving fleet
+reads the manifest's policy and consolidates without being told how the
+trainer sharded.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core import replica
+from repro.core.plan import AveragingConfig, Topology, compile_plan
+from repro.core.replica import ReplicaState, ShardingPolicy
+from repro.models.registry import build_model
+from repro.optim import sgd
+from repro.serve.handoff import (serving_weights_from_checkpoint,
+                                 serving_weights_from_state)
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    model = build_model(cfg)
+    p0 = model.init(jax.random.PRNGKey(0))
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (P,) + a.shape), p0)
+    opt = jax.vmap(sgd(0.1, momentum=0.9).init)(stacked)
+    state = ReplicaState.create(stacked, opt, step=7, phase=2)
+    return model, p0, state
+
+
+def _assert_tree_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+def _topo():
+    return Topology.hierarchical(("data", "pod"), (2, 2))
+
+
+def test_handoff_replicated(trained):
+    model, p0, state = trained
+    _assert_tree_equal(serving_weights_from_state(state), p0)
+
+
+def test_handoff_fsdp(trained):
+    model, p0, state = trained
+    struct = jax.eval_shape(lambda: p0)
+    plan = compile_plan(_topo(), struct, AveragingConfig(group_size=2),
+                        ShardingPolicy.fsdp_within_pod("data"))
+    fsdp = replica.replicated_to_fsdp_state(state, plan)
+    assert isinstance(fsdp.params, tuple)          # shard buffers
+    _assert_tree_equal(
+        serving_weights_from_state(fsdp, plan=plan, model=model), p0)
+
+
+def test_handoff_streamed_fsdp(trained):
+    model, p0, state = trained
+    layered_struct = jax.eval_shape(model.layered.split, p0)
+    plan = compile_plan(_topo(), layered_struct,
+                        AveragingConfig(group_size=2),
+                        ShardingPolicy.fsdp_within_pod("data", streamed=True))
+    streamed = replica.replicated_to_fsdp_state(
+        replica.split_layered_state(state, model.layered), plan)
+    weights = serving_weights_from_state(streamed, plan=plan, model=model)
+    _assert_tree_equal(weights, p0)                # merged back to canonical
+    # a streamed state without the model to merge it fails loudly
+    with pytest.raises(ValueError, match="layered"):
+        serving_weights_from_state(streamed, plan=plan)
+
+
+def test_handoff_weights_serve_identically(trained):
+    model, p0, state = trained
+    weights = serving_weights_from_state(state)
+    prompt = jnp.asarray(
+        np.random.default_rng(0).integers(0, model.cfg.vocab, (1, 6)),
+        jnp.int32)
+    pf = jax.jit(lambda p, b: model.prefill(p, b, 8))
+    la, _ = pf(p0, {"tokens": prompt})
+    lb, _ = pf(weights, {"tokens": prompt})
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_handoff_from_checkpoint_both_policies(trained, tmp_path):
+    model, p0, state = trained
+    # replicated checkpoint: the manifest says replicated, no plan needed
+    rep_dir = str(tmp_path / "rep")
+    ckpt.save_replica_state(rep_dir, state)
+    template = jax.eval_shape(lambda: state)
+    _assert_tree_equal(
+        serving_weights_from_checkpoint(rep_dir, template), p0)
+
+    # FSDP checkpoint: policy read from the manifest routes consolidation
+    # through the plan's shard layout
+    struct = jax.eval_shape(lambda: p0)
+    pol = ShardingPolicy.fsdp_within_pod("data")
+    plan = compile_plan(_topo(), struct, AveragingConfig(group_size=2), pol)
+    fsdp = replica.replicated_to_fsdp_state(state, plan)
+    fsdp_dir = str(tmp_path / "fsdp")
+    ckpt.save_replica_state(fsdp_dir, fsdp, sharding=pol)
+    assert ckpt.checkpoint_sharding(fsdp_dir).is_sharded
+    template = replica.sharded_state_template(plan, fsdp.opt_state)
+    _assert_tree_equal(
+        serving_weights_from_checkpoint(fsdp_dir, template, plan=plan,
+                                        model=model), p0)
